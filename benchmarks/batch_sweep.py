@@ -1,0 +1,40 @@
+"""Paper Fig. 5 analogue: execution time vs batch size for sequential
+CPU, naive Data-only GPU (X), fully-parallel GPU (XYZ) and the HEP
+efficient configuration. Also covers Fig. 1 (CPU vs parallel gap)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.mapper import map_efficient_configuration, uniform_total
+from repro.core.profiler import profile_bnn_model
+
+
+def run(scale: float = 0.5, batch_sizes=(1, 4, 16), repeats: int = 2):
+    rows = []
+    for name in ("fashion_mnist", "cifar10"):
+        m = build_model(name, scale=scale)
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+        table = profile_bnn_model(
+            m, packed, batch_sizes=batch_sizes, repeats=repeats
+        )
+        ec = map_efficient_configuration(table)
+        for b in batch_sizes:
+            hep_b = sum(
+                min(table.times[b][i].values())
+                for i in range(len(table.layer_labels))
+            )
+            for label, t in (
+                ("CPU", uniform_total(table, "CPU", b)),
+                ("naiveX", uniform_total(table, "X", b)),
+                ("fullXYZ", uniform_total(table, "XYZ", b)),
+                ("HEP", hep_b),
+            ):
+                rows.append((f"fig5/{name}/{label}@b{b}", t * 1e6, ""))
+        rows.append(
+            (f"fig5/{name}/HEP-proper@b{ec.proper_batch_size}",
+             ec.expected_time_per_example * 1e6, "")
+        )
+    return rows

@@ -1,0 +1,39 @@
+"""Paper Tables IV/V (efficient configuration per layer) and Table VI
+(minimum inference time + proper batch size)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.mapper import best_uniform, map_efficient_configuration
+from repro.core.profiler import profile_bnn_model
+
+
+def run(scale: float = 0.5, batch_sizes=(1, 4, 16), repeats: int = 2):
+    rows = []
+    for name in ("fashion_mnist", "cifar10"):
+        m = build_model(name, scale=scale)
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+        table = profile_bnn_model(
+            m, packed, batch_sizes=batch_sizes, repeats=repeats
+        )
+        ec = map_efficient_configuration(table)
+        # Table IV/V row: per-layer chosen configs
+        mapping = " ".join(
+            f"{l.split(':')[1]}={c}"
+            for l, c in zip(ec.layer_labels, ec.layer_configs)
+        )
+        print(f"# TableIV/V {name}: {mapping}")
+        rows.append(
+            (f"tableVI/{name}/HEP@b{ec.proper_batch_size}",
+             ec.expected_time_per_example * 1e6, "")
+        )
+        for base in ("CPU", "X", "XYZ"):
+            b, t = best_uniform(table, base)
+            rows.append(
+                (f"tableVI/{name}/uniform-{base}@b{b}", t * 1e6,
+                 f"speedup_vs={t / ec.expected_time_per_example:.2f}x")
+            )
+    return rows

@@ -1,0 +1,49 @@
+"""xnor/popcount kernel micro-benchmarks: measured XLA-variant times on
+the host platform for paper-sized layers (the framework's compute
+substrate)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import xnor_gemm
+
+# (label, B, P, Kw, N): CIFAR C256 block + FC
+CASES = (
+    ("conv_c256", 8, 256, 72, 256),
+    ("fc1024", 32, 1, 128, 1024),
+)
+
+
+def _bench(fn, n=3):
+    fn().block_until_ready()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for label, b, p, kw, n in CASES:
+        a = jax.random.randint(key, (b, p, kw), -2**31, 2**31 - 1,
+                               dtype=jnp.int32)
+        w = jax.random.randint(jax.random.fold_in(key, 1), (n, kw),
+                               -2**31, 2**31 - 1, dtype=jnp.int32)
+        t_ref = _bench(lambda: xnor_gemm(a, w, k_true=kw * 32,
+                                         backend="ref"))
+        rows.append((f"kernel/{label}/ref", t_ref * 1e6, ""))
+        for asp in (("X",), ("Y", "Z"), ("X", "Y", "Z")):
+            t = _bench(lambda asp=asp: xnor_gemm(
+                a, w, k_true=kw * 32, aspects=asp, backend="variant"))
+            rows.append(
+                (f"kernel/{label}/{''.join(asp)}", t * 1e6,
+                 f"vs_ref={t_ref / t:.2f}x")
+            )
+    return rows

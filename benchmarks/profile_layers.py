@@ -1,0 +1,30 @@
+"""Paper Fig. 4 analogue: the per-layer x per-implementation timing
+matrix the mapping algorithm consumes."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.parallel_config import CONFIGS
+from repro.core.profiler import profile_bnn_model
+
+
+def run(scale: float = 0.5, batch_sizes=(1, 8), repeats: int = 2):
+    rows = []
+    for name in ("fashion_mnist", "cifar10"):
+        m = build_model(name, scale=scale)
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+        table = profile_bnn_model(
+            m, packed, batch_sizes=batch_sizes, repeats=repeats
+        )
+        b = batch_sizes[-1]
+        for i, label in enumerate(table.layer_labels):
+            row = table.times[b][i]
+            for cfg in CONFIGS:
+                rows.append(
+                    (f"profile/{name}/{label}/{cfg}@b{b}",
+                     row[cfg] * 1e6, "")
+                )
+    return rows

@@ -1,0 +1,51 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report > results/roofline.md
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import load_cells
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_s(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def main():
+    cells = load_cells()
+    by = {}
+    for r in cells:
+        by[(r["arch"], r["shape"], r["multi_pod"])] = r
+
+    print("| arch | shape | mesh | compute | memory | collective | "
+          "dominant | MODEL_FLOPs | useful | peak GiB/dev | coll GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mp), r in sorted(by.items()):
+        rf = r["roofline"]
+        print(
+            f"| {arch} | {shape} | {'2x16x16' if mp else '16x16'} "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} | **{rf['dominant']}** "
+            f"| {rf['model_flops']:.2e} | {rf['useful_ratio']:.2f} "
+            f"| {fmt_bytes(r['memory']['peak_bytes_per_device'])} "
+            f"| {fmt_bytes(r['collectives']['per_device_bytes'])} |"
+        )
+
+    n_ok = len(cells)
+    print(f"\n{n_ok} cells ok.", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

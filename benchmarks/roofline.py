@@ -1,0 +1,41 @@
+"""§Roofline: the three-term table per (arch x shape x mesh) from the
+dry-run artifacts in results/dryrun (run the dry-run first; this bench
+renders + derives, it does not compile)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    if not RESULTS.exists():
+        return cells
+    for fp in sorted(RESULTS.glob("*__*.json")):
+        r = json.loads(fp.read_text())
+        if r.get("status") == "ok":
+            cells.append(r)
+    return cells
+
+
+def run():
+    rows = []
+    for r in load_cells():
+        rf = r.get("roofline")
+        if not rf:
+            continue
+        tag = (f"{r['arch']}/{r['shape']}/"
+               f"{'pod2' if r['multi_pod'] else 'pod1'}")
+        step_s = max(rf["compute_s"], rf["memory_s"]) + rf["collective_s"]
+        rows.append(
+            (f"roofline/{tag}", step_s * 1e6,
+             f"dom={rf['dominant']};useful={rf['useful_ratio']:.2f};"
+             f"peakGiB={r['memory']['peak_bytes_per_device']/2**30:.1f}")
+        )
+    if not rows:
+        rows.append(("roofline/NO-DRYRUN-RESULTS", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+  profile_layers     -> Fig. 4 (per-layer x per-implementation matrix)
+  efficient_configs  -> Tables IV/V (mappings) + Table VI (min times)
+  batch_sweep        -> Fig. 5 (+ Fig. 1 CPU-vs-parallel gap)
+  kernel_bench       -> §II-C compute substrate micro-bench
+  roofline           -> EXPERIMENTS.md §Roofline (reads results/dryrun)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        batch_sweep, efficient_configs, kernel_bench, profile_layers,
+        roofline,
+    )
+
+    quick = "--quick" in sys.argv
+    suites = [
+        ("kernel_bench", kernel_bench.run, {}),
+        ("roofline", roofline.run, {}),
+        ("efficient_configs", efficient_configs.run,
+         {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1}
+         if quick else {}),
+        ("batch_sweep", batch_sweep.run,
+         {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1}
+         if quick else {}),
+        ("profile_layers", profile_layers.run,
+         {"scale": 0.25, "batch_sizes": (1,), "repeats": 1}
+         if quick else {}),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn, kwargs in suites:
+        t0 = time.time()
+        try:
+            rows = fn(**kwargs)
+        except Exception as e:  # a failing suite must not hide others
+            print(f"{name}/SUITE-ERROR,0,{e!r}")
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.2f},{derived}")
+        print(f"# suite {name} took {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: train a small BNN with the STE recipe, quantize to
+bit-packed inference form, let HEP-BNN map each layer to its fastest
+implementation, and run the mapped model.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.bnn.train import eval_step, init_train_state, train_step
+from repro.core import build_mapped_model, map_efficient_configuration
+from repro.core.mapper import best_uniform
+from repro.core.profiler import profile_bnn_model
+from repro.data import ShardedBatcher, make_image_dataset
+
+
+def main():
+    # 1. train (synthetic Fashion-MNIST stand-in — offline container)
+    model = build_model("fashion_mnist", scale=0.5)
+    ds = make_image_dataset(0, 2048, model.input_hw, model.in_channels)
+    state, opt = init_train_state(model, jax.random.PRNGKey(0), lr=2e-3)
+    batcher = ShardedBatcher(n=2048, global_batch=64, seed=0)
+    for step in range(60):
+        x, y = batcher.batch((ds.x, ds.y), step)
+        state, metrics = train_step(model, opt, state, x, y)
+    xe, ye = batcher.batch((ds.x, ds.y), 9_999)
+    print(f"eval acc after 60 steps: {eval_step(model, state.params, xe, ye):.3f}")
+
+    # 2. quantize -> packed xnor/popcount inference model
+    packed = pack_params(model.specs, state.params)
+
+    # 3. HEP-BNN: profile every layer under all 8 implementations
+    table = profile_bnn_model(
+        model, packed, batch_sizes=(1, 4, 16), repeats=2
+    )
+    ec = map_efficient_configuration(table)
+    print(f"proper batch size: {ec.proper_batch_size}")
+    for l, c in zip(ec.layer_labels, ec.layer_configs):
+        print(f"  {l:12s} -> {c}")
+    _, t_xyz = best_uniform(table, "XYZ")
+    print(
+        f"HEP {ec.expected_time_per_example*1e6:.0f} us/img vs "
+        f"full-XYZ {t_xyz*1e6:.0f} us/img "
+        f"({t_xyz/ec.expected_time_per_example:.2f}x speedup)"
+    )
+
+    # 4. build + run the mapped model; verify exactness
+    mapped = build_mapped_model(model, packed, ec)
+    x, _ = batcher.batch((ds.x, ds.y), 123)
+    x = x[: ec.proper_batch_size]
+    xw = prepare_input_packed(x)
+    out = mapped(xw)
+    ref = forward_packed(model.specs, packed, xw)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    print("mapped model output == reference (exact)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: HEP-BNN on TPU.
+
+A JAX framework implementing the HEP-BNN paper's profiling-driven
+per-layer execution-configuration search, with a BNN substrate
+(bit-packed xnor/popcount inference, STE training), Pallas TPU kernels
+parameterized by the paper's X/Y/Z parallelism aspects, and a multi-pod
+LM substrate where the same greedy mapper selects per-layer sharding
+schemes (HEP-Shard).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,31 @@
+"""BNN substrate: bit-packing, binary layers, paper models, STE training.
+
+Conventions (shared with kernels/ and core/):
+  * A binary value is conceptually in {-1, +1}; the stored bit is 1 for +1
+    and 0 for -1.
+  * Packed tensors are int32 with 32 bits packed along the LAST axis,
+    least-significant bit first.
+  * Activation words pad their tail lanes with bit 0, weight words with
+    bit 1, so xnor tail lanes are always 0 and popcount counts only true
+    lanes; `dot = 2 * popcount(xnor) - K_true` is then exact.
+  * Integer (pre-activation) tensors are int32.
+"""
+
+from repro.bnn.binarize import (
+    pack_bits,
+    unpack_bits,
+    binarize,
+    binarize_ste,
+    PACK_W,
+)
+from repro.bnn.layers import (
+    LayerSpec,
+    parse_notation,
+    init_bnn_params,
+)
+from repro.bnn.models import (
+    FASHION_MNIST_NOTATION,
+    CIFAR10_NOTATION,
+    BNNModel,
+    build_model,
+)

@@ -1,0 +1,324 @@
+"""BNN layer specs, parameter init, fp-sim (training) and packed-integer
+(inference) per-layer implementations.
+
+Two execution domains:
+
+* **fp-sim** (training): values are float32 in {-1,+1} between layers,
+  integers-as-floats for pre-activations; weights are latent fp32
+  binarized on the forward pass with the straight-through estimator.
+* **packed** (inference): binary tensors are bit-packed int32 words
+  (see ``repro.bnn.binarize``); pre-activations are int32; step layers
+  use batch-norm folded into integer thresholds (``repro.bnn.fold_bn``).
+
+The packed per-layer functions here are the **CPU implementation** in the
+paper's sense — the sequential reference. The parallel X/Y/Z variants
+live in ``repro.kernels`` and are selected per layer by the HEP mapper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bnn.binarize import (
+    PACK_W,
+    binarize,
+    binarize_ste,
+    pack_bits,
+    packed_len,
+    popcount,
+)
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Layer specs / notation parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one layer in paper notation."""
+
+    idx: int            # 1-based position, as in the paper's tables
+    kind: str           # 'conv' | 'mp' | 'step' | 'flat' | 'fc'
+    notation: str       # e.g. 'C64', 'MP16', 'S', 'FLAT', 'FC1024'
+    in_shape: tuple     # per-example logical shape (no batch), unpacked
+    out_shape: tuple    # per-example logical shape (no batch), unpacked
+    # conv/fc: number of output units; step: channel count
+    units: int = 0
+
+    @property
+    def reduce_dim(self) -> int:
+        """Reduction length K for conv (9*Cin) / fc (Din)."""
+        if self.kind == "conv":
+            return 9 * self.in_shape[-1]
+        if self.kind == "fc":
+            return int(np.prod(self.in_shape))
+        return 0
+
+
+def parse_notation(
+    notation: Sequence[str],
+    input_hw: tuple,
+    in_channels: int,
+    n_classes: int,
+) -> list[LayerSpec]:
+    """Build LayerSpecs from paper notation.
+
+    The final FC layer maps its input to ``n_classes`` (the paper's
+    trailing '-> 10'); every other FCx maps to x units. Convs are 3x3,
+    SAME (pad value -1); maxpool is 2x2/2 with MPx asserting output x.
+    """
+    specs: list[LayerSpec] = []
+    h, w = input_hw
+    shape: tuple = (h, w, in_channels)
+    last_fc = max(
+        i for i, s in enumerate(notation) if s.startswith("FC")
+    )
+    for i, token in enumerate(notation):
+        idx = i + 1
+        if m := re.fullmatch(r"C(\d+)", token):
+            cout = int(m.group(1))
+            out = (shape[0], shape[1], cout)
+            specs.append(LayerSpec(idx, "conv", token, shape, out, cout))
+        elif m := re.fullmatch(r"MP(\d+)", token):
+            tgt = int(m.group(1))
+            out = (shape[0] // 2, shape[1] // 2, shape[2])
+            if out[0] != tgt:
+                raise ValueError(
+                    f"{token} at layer {idx}: 2x2 pool of {shape} gives "
+                    f"{out[0]}, expected {tgt}"
+                )
+            specs.append(LayerSpec(idx, "mp", token, shape, out, shape[2]))
+        elif token == "S":
+            specs.append(
+                LayerSpec(idx, "step", token, shape, shape, shape[-1])
+            )
+        elif token == "FLAT":
+            out = (int(np.prod(shape)),)
+            specs.append(LayerSpec(idx, "flat", token, shape, out))
+        elif m := re.fullmatch(r"FC(\d+)", token):
+            din = int(np.prod(shape))
+            dout = n_classes if i == last_fc else int(m.group(1))
+            if i == last_fc and int(m.group(1)) != din:
+                # paper notation: trailing FCx names its input width
+                pass
+            out = (dout,)
+            specs.append(LayerSpec(idx, "fc", token, (din,), out, dout))
+        else:
+            raise ValueError(f"unknown layer token {token!r}")
+        shape = specs[-1].out_shape
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_bnn_params(key: jax.Array, specs: Sequence[LayerSpec]) -> list[dict]:
+    """One dict per layer. Trainable: conv/fc 'w' (latent fp32), step
+    'gamma'/'beta'. State: step 'mean'/'var' (running stats)."""
+    params: list[dict] = []
+    for spec in specs:
+        if spec.kind == "conv":
+            cin = spec.in_shape[-1]
+            key, sub = jax.random.split(key)
+            scale = 1.0 / np.sqrt(9 * cin)
+            params.append(
+                {"w": jax.random.uniform(
+                    sub, (3, 3, cin, spec.units), jnp.float32, -scale, scale
+                )}
+            )
+        elif spec.kind == "fc":
+            din = spec.in_shape[0]
+            key, sub = jax.random.split(key)
+            scale = 1.0 / np.sqrt(din)
+            params.append(
+                {"w": jax.random.uniform(
+                    sub, (din, spec.units), jnp.float32, -scale, scale
+                )}
+            )
+        elif spec.kind == "step":
+            c = spec.units
+            params.append(
+                {
+                    "gamma": jnp.ones((c,), jnp.float32),
+                    "beta": jnp.zeros((c,), jnp.float32),
+                    "mean": jnp.zeros((c,), jnp.float32),
+                    "var": jnp.ones((c,), jnp.float32),
+                }
+            )
+        else:
+            params.append({})
+    return params
+
+
+TRAINABLE_KEYS = {"w", "gamma", "beta"}
+
+
+def split_trainable(params: list[dict]) -> tuple[list[dict], list[dict]]:
+    train = [
+        {k: v for k, v in p.items() if k in TRAINABLE_KEYS} for p in params
+    ]
+    state = [
+        {k: v for k, v in p.items() if k not in TRAINABLE_KEYS}
+        for p in params
+    ]
+    return train, state
+
+
+def merge_params(train: list[dict], state: list[dict]) -> list[dict]:
+    return [dict(**t, **s) for t, s in zip(train, state)]
+
+
+# ---------------------------------------------------------------------------
+# fp-sim (training) per-layer forwards
+# ---------------------------------------------------------------------------
+
+
+def conv_fp(x: jax.Array, w_latent: jax.Array) -> jax.Array:
+    """3x3 SAME binary conv on {-1,+1} inputs; pad value -1 (binary
+    domain has no zero). Output is integer-valued float32."""
+    wb = binarize_ste(w_latent)
+    xp = jnp.pad(
+        x, ((0, 0), (1, 1), (1, 1), (0, 0)), constant_values=-1.0
+    )
+    return jax.lax.conv_general_dilated(
+        xp, wb, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool_fp(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def step_fp(
+    x: jax.Array, p: dict, *, train: bool
+) -> tuple[jax.Array, dict]:
+    """Batch norm + binary activation (Hard-Tanh STE). Returns output and
+    updated running-stat dict."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": (1 - BN_MOMENTUM) * p["mean"] + BN_MOMENTUM * mean,
+            "var": (1 - BN_MOMENTUM) * p["var"] + BN_MOMENTUM * var,
+        }
+    else:
+        mean, var = p["mean"], p["var"]
+        new_state = {"mean": p["mean"], "var": p["var"]}
+    y = (x - mean) * jax.lax.rsqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    return binarize_ste(y), new_state
+
+
+def fc_fp(x: jax.Array, w_latent: jax.Array) -> jax.Array:
+    return x @ binarize_ste(w_latent)
+
+
+def forward_fp(
+    specs: Sequence[LayerSpec],
+    params: list[dict],
+    x_pm1: jax.Array,
+    *,
+    train: bool = False,
+) -> tuple[jax.Array, list[dict]]:
+    """Full fp-sim forward on a {-1,+1} input batch (B,H,W,C). Returns
+    (logits, params-with-updated-bn-state)."""
+    new_params = []
+    x = x_pm1
+    for spec, p in zip(specs, params):
+        if spec.kind == "conv":
+            x = conv_fp(x, p["w"])
+            new_params.append(p)
+        elif spec.kind == "mp":
+            x = maxpool_fp(x)
+            new_params.append(p)
+        elif spec.kind == "step":
+            x, new_state = step_fp(x, p, train=train)
+            new_params.append({**p, **new_state})
+        elif spec.kind == "flat":
+            x = x.reshape(x.shape[0], -1)
+            new_params.append(p)
+        elif spec.kind == "fc":
+            x = fc_fp(x, p["w"])
+            new_params.append(p)
+    return x, new_params
+
+
+def binarize_input(x01: jax.Array) -> jax.Array:
+    """Map images in [0,1] to {-1,+1} (threshold 0.5)."""
+    return binarize(x01 - 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Packed-integer (inference) per-layer forwards — the 'CPU' implementation
+# ---------------------------------------------------------------------------
+
+
+def extract_patch_words(x_words: jax.Array) -> jax.Array:
+    """(B,H,W,Cw) packed -> (B,H,W,9*Cw) 3x3 SAME patches. Spatial pad
+    words are 0 == all -1 pixels (the binary-domain pad value)."""
+    b, h, w, cw = x_words.shape
+    xp = jnp.pad(x_words, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    offs = [
+        xp[:, dy : dy + h, dx : dx + w, :]
+        for dy in range(3)
+        for dx in range(3)
+    ]
+    return jnp.concatenate(offs, axis=-1)
+
+
+def conv_packed(
+    x_words: jax.Array, w_words: jax.Array, k_true: int
+) -> jax.Array:
+    """Packed binary conv. x_words (B,H,W,Cw); w_words (Cout, 9*Cw);
+    output int32 (B,H,W,Cout) with exact {-1,+1} conv values."""
+    patches = extract_patch_words(x_words)          # (B,H,W,9Cw)
+    # xnor each patch against each output channel's weight words, sum
+    # popcounts over the word axis
+    xn = ~(patches[:, :, :, None, :] ^ w_words[None, None, None, :, :])
+    agree = jnp.sum(popcount(xn), axis=-1, dtype=jnp.int32)
+    return 2 * agree - k_true
+
+
+def maxpool_packed(x: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def step_packed(
+    x_int: jax.Array, thresh: jax.Array, flip: jax.Array
+) -> jax.Array:
+    """int32 pre-activations -> packed bits via per-channel integer
+    threshold: bit = (x > T) ^ flip."""
+    bits = (x_int > thresh) ^ flip
+    return pack_bits(bits)
+
+
+def flat_packed(x_words: jax.Array, channels: int) -> jax.Array:
+    """(B,h,w,Cw) -> (B, h*w*Cw). Requires channels % 32 == 0 so no tail
+    lanes interleave (true for all paper models at the FLAT position)."""
+    if channels % PACK_W != 0:
+        raise ValueError("flatten of packed words needs C % 32 == 0")
+    return x_words.reshape(x_words.shape[0], -1)
+
+
+def fc_packed(
+    x_words: jax.Array, w_words: jax.Array, k_true: int
+) -> jax.Array:
+    """Packed binary FC. x (B, Kw); w (Dout, Kw); out int32 (B, Dout)."""
+    xn = ~(x_words[:, None, :] ^ w_words[None, :, :])
+    agree = jnp.sum(popcount(xn), axis=-1, dtype=jnp.int32)
+    return 2 * agree - k_true

@@ -1,0 +1,135 @@
+"""Paper BNN models (Tables I & II) + packed-inference parameter
+preparation.
+
+`build_model` returns a :class:`BNNModel` whose `specs` drive both the
+fp-sim training forward and the per-layer packed inference used by the
+HEP mapper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bnn import layers as L
+from repro.bnn.binarize import np_pack_bits, pack_bits, packed_len
+from repro.bnn.fold_bn import fold_bn
+
+# Table II — FashionMNIST BNN (10 layers)
+FASHION_MNIST_NOTATION = (
+    "C64", "MP14", "S", "C64", "MP7", "S", "FLAT", "FC2048", "S", "FC2048",
+)
+# Table I — CIFAR-10 BNN (19 layers)
+CIFAR10_NOTATION = (
+    "C64", "S", "C64", "MP16", "S", "C256", "S", "C256", "MP8", "S",
+    "C512", "S", "C512", "MP4", "S", "FLAT", "FC1024", "S", "FC1024",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNModel:
+    name: str
+    specs: tuple
+    input_hw: tuple
+    in_channels: int
+    n_classes: int
+
+    def init(self, key: jax.Array) -> list[dict]:
+        return L.init_bnn_params(key, self.specs)
+
+    def apply_fp(self, params, x01, *, train=False):
+        """[0,1] images -> logits (fp-sim path)."""
+        x = L.binarize_input(x01)
+        return L.forward_fp(self.specs, params, x, train=train)
+
+
+_REGISTRY = {
+    "fashion_mnist": (FASHION_MNIST_NOTATION, (28, 28), 1, 10),
+    "cifar10": (CIFAR10_NOTATION, (32, 32), 3, 10),
+}
+
+
+def build_model(name: str, *, scale: float = 1.0) -> BNNModel:
+    """Build a paper model. ``scale`` < 1 shrinks channel/unit counts
+    (for smoke tests) while preserving the layer structure."""
+    notation, hw, cin, ncls = _REGISTRY[name]
+    if scale != 1.0:
+        def shrink(tok: str) -> str:
+            import re
+            if m := re.fullmatch(r"(C|FC)(\d+)", tok):
+                n = max(32, int(int(m.group(2)) * scale))
+                n = (n // 32) * 32  # keep word-aligned
+                return f"{m.group(1)}{n}"
+            return tok
+        notation = tuple(shrink(t) for t in notation)
+    specs = tuple(L.parse_notation(notation, hw, cin, ncls))
+    return BNNModel(name, specs, hw, cin, ncls)
+
+
+# ---------------------------------------------------------------------------
+# Packed-inference parameter preparation
+# ---------------------------------------------------------------------------
+
+
+def pack_params(specs: Sequence[L.LayerSpec], params: list[dict]) -> list[dict]:
+    """Quantize trained fp params into packed inference params.
+
+    conv:  w (3,3,Cin,Cout) -> words (Cout, 9*ceil(Cin/32)), tail bit 1
+    fc:    w (Din,Dout)     -> words (Dout, ceil(Din/32)),   tail bit 1
+    step:  gamma/beta/mean/var -> (thresh int32, flip bool) per channel
+    """
+    packed: list[dict] = []
+    for spec, p in zip(specs, params):
+        if spec.kind == "conv":
+            w = np.asarray(p["w"])              # (3,3,Cin,Cout)
+            cin, cout = w.shape[2], w.shape[3]
+            # (Cout, 9, Cin): patch order must match extract_patch_words
+            # (dy-major, dx-minor), i.e. w[dy,dx] for dy in 0..2, dx in 0..2
+            wt = np.transpose(w, (3, 0, 1, 2)).reshape(cout, 9, cin)
+            words = np_pack_bits(np.sign(wt) + 0.5, pad_bit=1)
+            packed.append(
+                {"w_words": jnp.asarray(words.reshape(cout, -1)),
+                 "k_true": 9 * cin}
+            )
+        elif spec.kind == "fc":
+            w = np.asarray(p["w"])              # (Din, Dout)
+            words = np_pack_bits(np.sign(w.T) + 0.5, pad_bit=1)
+            packed.append(
+                {"w_words": jnp.asarray(words), "k_true": w.shape[0]}
+            )
+        elif spec.kind == "step":
+            t, f = fold_bn(p["gamma"], p["beta"], p["mean"], p["var"])
+            packed.append({"thresh": jnp.asarray(t), "flip": jnp.asarray(f)})
+        else:
+            packed.append({})
+    return packed
+
+
+def prepare_input_packed(x01: jax.Array) -> jax.Array:
+    """[0,1] images (B,H,W,C) -> packed words (B,H,W,ceil(C/32)),
+    matching the fp path's binarize_input (threshold 0.5, ties -> +1)."""
+    return pack_bits(x01 - 0.5 >= 0)
+
+
+def forward_packed(
+    specs: Sequence[L.LayerSpec], packed: list[dict], x_words: jax.Array
+) -> jax.Array:
+    """Reference packed inference (the 'CPU' implementation end to end).
+    Returns int32 class scores."""
+    x = x_words
+    for spec, p in zip(specs, packed):
+        if spec.kind == "conv":
+            x = L.conv_packed(x, p["w_words"], p["k_true"])
+        elif spec.kind == "mp":
+            x = L.maxpool_packed(x)
+        elif spec.kind == "step":
+            x = L.step_packed(x, p["thresh"], p["flip"])
+        elif spec.kind == "flat":
+            x = L.flat_packed(x, spec.in_shape[-1])
+        elif spec.kind == "fc":
+            x = L.fc_packed(x, p["w_words"], p["k_true"])
+    return x

@@ -1,0 +1,76 @@
+"""STE training for the paper's BNN models.
+
+Latent fp32 weights, binarized on the forward pass (clipped STE
+backward), fp batch-norm with running stats, AdamW on the latent
+weights with post-update clipping to [-1, 1] (standard BNN recipe —
+keeps latent weights in the STE's pass-through region).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.bnn import layers as L
+from repro.bnn.models import BNNModel
+from repro.optim import adamw, clip_by_global_norm
+from repro.optim.optimizers import OptState
+
+
+class TrainState(NamedTuple):
+    params: list  # full per-layer dicts (trainable + bn state)
+    opt: OptState
+    step: jax.Array
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def init_train_state(model: BNNModel, key: jax.Array, lr: float = 1e-3):
+    params = model.init(key)
+    opt = adamw(lr)
+    trainable, _ = L.split_trainable(params)
+    return TrainState(params, opt.init(trainable), jnp.zeros((), jnp.int32)), opt
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def train_step(model: BNNModel, opt, state: TrainState, x01, labels):
+    """One STE step. Returns (new_state, metrics)."""
+    trainable, bn_state = L.split_trainable(state.params)
+
+    def loss_fn(trainable):
+        params = L.merge_params(trainable, bn_state)
+        logits, new_params = model.apply_fp(params, x01, train=True)
+        return cross_entropy(logits.astype(jnp.float32), labels), (
+            logits,
+            new_params,
+        )
+
+    (loss, (logits, new_params)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(trainable)
+    grads, gnorm = clip_by_global_norm(grads, 1.0)
+    new_trainable, new_opt = opt.update(grads, state.opt, trainable)
+    # clip latent weights into the STE pass-through region
+    new_trainable = jax.tree.map(
+        lambda p: jnp.clip(p, -1.0, 1.0), new_trainable
+    )
+    _, new_bn = L.split_trainable(new_params)
+    merged = L.merge_params(new_trainable, new_bn)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return (
+        TrainState(merged, new_opt, state.step + 1),
+        {"loss": loss, "acc": acc, "grad_norm": gnorm},
+    )
+
+
+@partial(jax.jit, static_argnums=(0,))
+def eval_step(model: BNNModel, params, x01, labels):
+    logits, _ = model.apply_fp(params, x01, train=False)
+    return jnp.mean(jnp.argmax(logits, -1) == labels)

@@ -1,0 +1,9 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-N GC, exact
+resume, async save."""
+
+from repro.ckpt.checkpoint import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    CheckpointManager,
+)

@@ -1,0 +1,115 @@
+"""Assigned-architecture registry: ``get(name)`` -> full ModelConfig,
+``get_smoke(name)`` -> reduced same-family config for CPU smoke tests,
+``input_specs(cfg, shape)`` -> ShapeDtypeStruct stand-ins per cell.
+
+Shapes (assigned to every LM arch):
+  train_4k     seq 4,096   global_batch 256   (train_step)
+  prefill_32k  seq 32,768  global_batch 32    (prefill_step)
+  decode_32k   seq 32,768  global_batch 128   (serve_step, 1 new token)
+  long_500k    seq 524,288 global_batch 1     (serve_step; sub-quadratic
+                                               archs only — see DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import cache_specs
+
+ARCH_NAMES = (
+    "deepseek_moe_16b",
+    "grok_1_314b",
+    "zamba2_7b",
+    "llava_next_mistral_7b",
+    "qwen2_5_14b",
+    "olmo_1b",
+    "minitron_8b",
+    "qwen2_0_5b",
+    "mamba2_130m",
+    "musicgen_medium",
+    # the paper's own models live in repro.bnn.models (image BNNs)
+)
+
+
+def _mod(name: str):
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str) -> ModelConfig:
+    return _mod(canonical(name)).config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _mod(canonical(name)).smoke_config()
+
+
+def canonical(name: str) -> str:
+    n = name.replace("-", "_").replace(".", "_")
+    if n not in ARCH_NAMES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k requires sub-quadratic context (ssm/hybrid)."""
+    if shape == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    sh = SHAPES[shape]
+    i32 = jnp.int32
+    nf = cfg.n_frontend_embeds
+    t_text = sh.seq - nf
+    dt = jnp.dtype(cfg.dtype)
+
+    if sh.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((sh.batch, t_text), i32),
+            "labels": jax.ShapeDtypeStruct((sh.batch, t_text), i32),
+        }
+        if nf:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (sh.batch, nf, cfg.d_model), dt
+            )
+        return specs
+
+    if sh.kind == "prefill":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((sh.batch, t_text), i32),
+        }
+        if nf:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (sh.batch, nf, cfg.d_model), dt
+            )
+        return specs
+
+    # decode: one token against a seq-length cache
+    return {
+        "token": jax.ShapeDtypeStruct((sh.batch, 1), i32),
+        "cache": cache_specs(cfg, sh.batch, sh.seq),
+    }

@@ -1,0 +1,26 @@
+"""HEP-BNN core — the paper's primary contribution.
+
+* :mod:`parallel_config` — the 8-way per-layer implementation space
+  (CPU + 7 parallel configurations built from the X/Y/Z aspects).
+* :mod:`profiler` — per-layer latency profiling across implementations
+  and batch sizes, including host<->device boundary costs.
+* :mod:`mapper` — Algorithm 1: greedy per-layer argmin + proper batch
+  size selection -> EfficientConfiguration.
+* :mod:`mapped_model` — builds the executable model from an
+  EfficientConfiguration (the JAX analogue of the paper's generated
+  CUDA/C++ code) and serializes the mapping artifact.
+* :mod:`cost_model` — analytic TPU v5e cost model (roofline terms per
+  layer x config) used when the target hardware is not the host.
+* :mod:`hep_shard` — the paper's algorithm lifted to multi-pod scale:
+  per-layer-class sharding-scheme selection driven by compiled dry-run
+  roofline costs.
+"""
+
+from repro.core.parallel_config import CONFIGS, ASPECT_CONFIGS, aspects_of
+from repro.core.mapper import (
+    EfficientConfiguration,
+    map_efficient_configuration,
+    uniform_total,
+)
+from repro.core.profiler import profile_bnn_model, ProfileTable
+from repro.core.mapped_model import build_mapped_model

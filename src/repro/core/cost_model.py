@@ -1,0 +1,158 @@
+"""Analytic TPU v5e cost model for the xnor/popcount kernels.
+
+Used when the mapping target is real TPU hardware this container cannot
+time (``time_source='analytic'`` in the profiler), and for per-layer
+roofline terms. Mirrors the roofline constants used in
+EXPERIMENTS.md §Roofline.
+
+The aspect configuration enters through the *grid order*: aspect
+(parallel) dims are outermost, non-aspect dims innermost (exactly how
+the Pallas kernel builds its grid). HBM traffic per operand follows the
+classic loop-nest reuse model: a block is (re)loaded once per iteration
+of every grid dim at or outside the innermost dim its index depends on.
+The parallel-vs-sequential split also sets the core-parallelism factor:
+grid iterations on parallel dims spread across ``TENSOR_CORES``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.bnn.layers import LayerSpec
+from repro.core.parallel_config import CPU, aspects_of
+
+# --- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_BF16_FLOPS = 197e12          # MXU
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s
+VPU_INT_OPS = 4e12                # int32 vector ops/s (VPU, est.)
+VMEM_BYTES = 128 * 1024 * 1024    # ~128 MiB v5e VMEM
+TENSOR_CORES = 1                  # v5e: single core per chip
+DISPATCH_OVERHEAD = 3e-6          # per kernel launch, seconds
+HOST_LINK_BW = 16e9               # host<->HBM (PCIe-ish), bytes/s
+HOST_LATENCY = 20e-6              # per host<->device boundary crossing
+# host CPU executing the layer itself (the paper's CPU device)
+CPU_BW = 50e9
+CPU_INT_OPS = 2e11
+
+P_BLK = 128
+N_BLK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmDims:
+    b: int      # batch (X axis)
+    p: int      # windows per image (Y axis)
+    n: int      # output neurons (Z axis)
+    kw: int     # packed reduction words
+
+    @property
+    def a_bytes(self):
+        return self.b * self.p * self.kw * 4
+
+    @property
+    def w_bytes(self):
+        return self.n * self.kw * 4
+
+    @property
+    def o_bytes(self):
+        return self.b * self.p * self.n * 4
+
+    @property
+    def vpu_ops(self):
+        # xor + not + popcount + add per word pair
+        return 4 * self.b * self.p * self.n * self.kw
+
+
+def gemm_dims_for(spec: LayerSpec, batch: int) -> GemmDims | None:
+    if spec.kind == "conv":
+        h, w, cin = spec.in_shape
+        return GemmDims(
+            b=batch, p=h * w, n=spec.units, kw=9 * math.ceil(cin / 32)
+        )
+    if spec.kind == "fc":
+        return GemmDims(
+            b=batch, p=1, n=spec.units, kw=math.ceil(spec.in_shape[0] / 32)
+        )
+    return None
+
+
+def _grid(dims: GemmDims, config: str):
+    """(ordered axis names, sizes, parallel flags) as the kernel builds
+    them: aspects outermost."""
+    aspects = set(aspects_of(config))
+    sizes = {
+        "X": dims.b,
+        "Y": math.ceil(dims.p / min(P_BLK, dims.p)),
+        "Z": math.ceil(dims.n / min(N_BLK, dims.n)),
+    }
+    order = [a for a in ("X", "Y", "Z") if a in aspects] + [
+        a for a in ("X", "Y", "Z") if a not in aspects
+    ]
+    return order, sizes, aspects
+
+
+def gemm_hbm_traffic(dims: GemmDims, config: str) -> float:
+    """Bytes moved HBM<->VMEM under the loop-nest reuse model."""
+    order, sizes, _ = _grid(dims, config)
+    p_blk, n_blk = min(P_BLK, dims.p), min(N_BLK, dims.n)
+    deps = {"a": {"X", "Y"}, "w": {"Z"}, "o": {"X", "Y", "Z"}}
+    block_bytes = {
+        "a": p_blk * dims.kw * 4,
+        "w": n_blk * dims.kw * 4,
+        "o": p_blk * n_blk * 4,
+    }
+    total = 0.0
+    for t, dep in deps.items():
+        depth = max(order.index(d) for d in dep)
+        loads = 1
+        for d in order[: depth + 1]:
+            loads *= sizes[d]
+        total += loads * block_bytes[t]
+    return total
+
+
+def gemm_time_tpu(dims: GemmDims, config: str) -> float:
+    """Seconds for one xnor-GEMM dispatch on a v5e chip under `config`.
+
+    compute and memory terms overlap (max), parallel aspect dims spread
+    over TENSOR_CORES, sequential dims serialize dispatch-free.
+    """
+    if config == CPU:
+        bytes_ = dims.a_bytes + dims.w_bytes + dims.o_bytes
+        return max(bytes_ / CPU_BW, dims.vpu_ops / CPU_INT_OPS)
+    order, sizes, aspects = _grid(dims, config)
+    par = 1
+    for a in aspects:
+        par *= sizes[a]
+    core_par = min(TENSOR_CORES, max(par, 1))
+    compute = dims.vpu_ops / (VPU_INT_OPS * core_par)
+    memory = gemm_hbm_traffic(dims, config) / HBM_BW
+    transfer = (
+        2 * HOST_LATENCY + (dims.a_bytes + dims.o_bytes) / HOST_LINK_BW
+    )
+    return max(compute, memory) + DISPATCH_OVERHEAD + transfer
+
+
+def elementwise_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
+    """mp / step / flat layers: pure memory-bound."""
+    import numpy as np
+
+    elems = batch * int(np.prod(spec.in_shape))
+    bytes_ = elems * 4 * 2
+    if config == CPU:
+        return bytes_ / CPU_BW
+    return (
+        bytes_ / HBM_BW
+        + DISPATCH_OVERHEAD
+        + 2 * HOST_LATENCY
+        + bytes_ / HOST_LINK_BW
+    )
+
+
+def layer_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
+    dims = gemm_dims_for(spec, batch)
+    if dims is None:
+        return elementwise_time_tpu(spec, config, batch)
+    return gemm_time_tpu(dims, config)

@@ -1,0 +1,113 @@
+"""HEP-Shard: the paper's mapping algorithm lifted to multi-pod scale.
+
+Exactly Algorithm 1's skeleton with substitutions:
+  layer implementation   ->  ShardScheme knob value (tp / fsdp /
+                             expert_mode / batch_over_model /
+                             seq_over_model)
+  profiled wall-clock    ->  compiled dry-run roofline terms
+                             (compute/memory/collective seconds,
+                             repro.launch.dryrun)
+  batch-size sweep       ->  knob sweep via greedy coordinate descent
+                             (one knob at a time, argmin cost, repeat
+                             until fixpoint — the paper's greedy
+                             per-layer argmin generalized to a config
+                             lattice)
+
+Cost = step-time estimate max(compute, memory) + collective (compute
+and memory overlap on TPU; collectives on ICI only partially — we use
+the conservative sum) + a hard penalty when peak bytes/device exceed
+HBM (a config that does not fit is not a config, it is an OOM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional
+
+from repro.parallel.sharding import ShardScheme
+
+HBM_BYTES = 16 * 2**30   # v5e
+OOM_PENALTY = 1e6
+
+
+@dataclasses.dataclass
+class ShardTrial:
+    scheme: ShardScheme
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    peak_bytes: int
+
+    @property
+    def cost(self) -> float:
+        c = max(self.compute_s, self.memory_s) + self.collective_s
+        if self.peak_bytes > HBM_BYTES:
+            c += OOM_PENALTY * (self.peak_bytes / HBM_BYTES)
+        return c
+
+
+KNOBS = {
+    "tp": (True, False),
+    "fsdp": ("zero1", "zero3", "none"),
+    "expert_mode": ("auto", "ep", "tp"),
+    "batch_over_model": (False, True),
+    "seq_over_model": (False, True),
+    "attn_kv_parallel": (False, True),
+    "out_proj_contracting_2d": (False, True),
+    "accum_steps": (1, 4, 8),
+}
+
+
+def search(
+    evaluate: Callable[[ShardScheme], ShardTrial],
+    start: Optional[ShardScheme] = None,
+    *,
+    knobs: Optional[dict] = None,
+    max_rounds: int = 3,
+    log: Optional[Callable[[str], None]] = print,
+) -> tuple:
+    """Greedy coordinate descent over the scheme lattice.
+
+    `evaluate` compiles the cell under a scheme and returns its trial
+    (cached by the caller — compiles are the expensive unit).
+    Returns (best ShardTrial, history list).
+    """
+    current = start or ShardScheme()
+    knobs = knobs or KNOBS
+    seen: dict = {}
+
+    def ev(scheme: ShardScheme) -> ShardTrial:
+        key = dataclasses.astuple(scheme)
+        if key not in seen:
+            seen[key] = evaluate(scheme)
+        return seen[key]
+
+    best = ev(current)
+    history = [best]
+    for round_ in range(max_rounds):
+        improved = False
+        for knob, values in knobs.items():       # Alg.1 foreach layer
+            trials = []
+            for v in values:                     # Alg.1 foreach implem
+                cand = dataclasses.replace(current, **{knob: v})
+                try:
+                    trials.append(ev(cand))
+                except Exception as e:           # an invalid combo is a
+                    if log:                      # profiled failure, not
+                        log(f"  {knob}={v}: {e!r}")  # a crash
+                    continue
+            t = min(trials, key=lambda t: t.cost)
+            if t.cost < best.cost - 1e-12:       # Alg.1 argmin
+                best = t
+                current = t.scheme
+                improved = True
+                if log:
+                    log(
+                        f"  round {round_} {knob} -> "
+                        f"{getattr(t.scheme, knob)}: cost {t.cost:.4f}s"
+                    )
+            history.append(t)
+        if not improved:
+            break
+    return best, history

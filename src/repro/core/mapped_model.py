@@ -1,0 +1,111 @@
+"""Build the executable model from an EfficientConfiguration — the JAX
+analogue of the paper's generated CUDA/C++ (§III-E).
+
+Two build modes:
+
+* ``fused=True`` (beyond-paper): one jitted function; layer boundaries
+  between same-placement layers carry no host roundtrip — the
+  optimization the paper names as future work ("data transfer ...
+  takes place before and after every layer's execution ... can be
+  adapted in future works").
+* ``fused=False`` (paper-faithful): a Python driver that executes each
+  layer's jitted implementation separately with an explicit host
+  roundtrip around every non-CPU layer, reproducing the cost structure
+  the profiler measured.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bnn import layers as L
+from repro.bnn.models import BNNModel
+from repro.core.mapper import EfficientConfiguration
+from repro.core.parallel_config import CPU, aspects_of
+from repro.kernels.ref import xnor_gemm_ref
+from repro.kernels.variants import xnor_gemm_variant
+
+
+def _layer_fn(spec, packed, config: str) -> Callable:
+    aspects = frozenset(aspects_of(config))
+    if spec.kind == "conv":
+        w, k_true = packed["w_words"], packed["k_true"]
+
+        def f(x):
+            b, h, ww, _ = x.shape
+            p = L.extract_patch_words(x).reshape(b, h * ww, -1)
+            o = (
+                xnor_gemm_ref(p, w, k_true)
+                if config == CPU
+                else xnor_gemm_variant(p, w, k_true, aspects)
+            )
+            return o.reshape(b, h, ww, -1)
+
+        return f
+    if spec.kind == "fc":
+        w, k_true = packed["w_words"], packed["k_true"]
+
+        def f(x):
+            p = x[:, None, :]
+            o = (
+                xnor_gemm_ref(p, w, k_true)
+                if config == CPU
+                else xnor_gemm_variant(p, w, k_true, aspects)
+            )
+            return o[:, 0, :]
+
+        return f
+    if spec.kind == "mp":
+        return L.maxpool_packed
+    if spec.kind == "step":
+        t, fl = packed["thresh"], packed["flip"]
+        return lambda x: L.step_packed(x, t, fl)
+    if spec.kind == "flat":
+        c = spec.in_shape[-1]
+        return lambda x: L.flat_packed(x, c)
+    raise ValueError(spec.kind)
+
+
+def build_mapped_model(
+    model: BNNModel,
+    packed_params: list,
+    config: EfficientConfiguration,
+    *,
+    fused: bool = True,
+) -> Callable:
+    """Returns fn(packed_input_words) -> int32 class scores, executing
+    each layer with its mapped implementation."""
+    fns = [
+        _layer_fn(spec, packed, cfg)
+        for spec, packed, cfg in zip(
+            model.specs, packed_params, config.layer_configs
+        )
+    ]
+
+    if fused:
+        @jax.jit
+        def run(x_words):
+            x = x_words
+            for f in fns:
+                x = f(x)
+            return x
+
+        return run
+
+    jitted = [jax.jit(f) for f in fns]
+
+    def run_faithful(x_words):
+        x = np.asarray(x_words)  # input starts on host
+        for f, cfg in zip(jitted, config.layer_configs):
+            xd = jnp.asarray(x)
+            out = f(xd)
+            jax.block_until_ready(out)
+            # non-CPU layers round-trip through the host (paper §IV-A)
+            x = np.asarray(out) if cfg != CPU else out
+        return np.asarray(x)
+
+    return run_faithful

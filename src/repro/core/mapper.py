@@ -1,0 +1,119 @@
+"""Algorithm 1 — the greedy layer-to-device mapping (paper §III-B).
+
+Faithful transcription: for each batch size, for each layer, choose the
+implementation with minimum inference time (kernel + boundary); the
+batch size whose summed per-layer minima is smallest becomes the
+*proper batch size*, and the per-layer argmins at that batch size form
+the *Efficient Configuration*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+from repro.core.parallel_config import CONFIGS, validate
+from repro.core.profiler import ProfileTable
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficientConfiguration:
+    model_name: str
+    proper_batch_size: int
+    layer_labels: tuple
+    layer_configs: tuple          # config per layer, paper Tables IV/V
+    expected_time_per_example: float
+    per_layer_times: tuple        # seconds/example at the proper batch
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "model": self.model_name,
+                "proper_batch_size": self.proper_batch_size,
+                "layers": [
+                    {"layer": l, "config": c, "time_per_example": t}
+                    for l, c, t in zip(
+                        self.layer_labels,
+                        self.layer_configs,
+                        self.per_layer_times,
+                    )
+                ],
+                "expected_time_per_example": self.expected_time_per_example,
+            },
+            indent=2,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "EfficientConfiguration":
+        d = json.loads(s)
+        layers = d["layers"]
+        return EfficientConfiguration(
+            model_name=d["model"],
+            proper_batch_size=d["proper_batch_size"],
+            layer_labels=tuple(x["layer"] for x in layers),
+            layer_configs=tuple(x["config"] for x in layers),
+            expected_time_per_example=d["expected_time_per_example"],
+            per_layer_times=tuple(
+                x["time_per_example"] for x in layers
+            ),
+        )
+
+
+def map_efficient_configuration(
+    table: ProfileTable, *, configs: Sequence[str] = CONFIGS
+) -> EfficientConfiguration:
+    """Algorithm 1, lines 1-27."""
+    result_time = float("inf")          # line 2
+    proper_batch = None                 # line 1
+    best_mapping: list = []
+    best_times: list = []
+
+    for batch in table.batch_sizes:     # line 3
+        sum_min_time = 0.0              # line 4
+        mapping, mins = [], []
+        for layer_idx in range(len(table.layer_labels)):  # line 5
+            row = table.times[batch][layer_idx]
+            min_time = float("inf")     # line 6
+            chosen = None
+            for impl in configs:        # line 7
+                t = row[impl]           # lines 8-9 (profiled)
+                if t < min_time:        # line 11
+                    min_time = t
+                    chosen = impl       # line 13 (MAP impl to batch)
+            sum_min_time += min_time    # line 16
+            mapping.append(chosen)
+            mins.append(min_time)
+        if sum_min_time < result_time:  # line 18
+            result_time = sum_min_time  # line 19
+            proper_batch = batch        # line 20
+            best_mapping, best_times = mapping, mins
+
+    return EfficientConfiguration(     # lines 23-27
+        model_name=table.model_name,
+        proper_batch_size=int(proper_batch),
+        layer_labels=table.layer_labels,
+        layer_configs=tuple(validate(c) for c in best_mapping),
+        expected_time_per_example=result_time,
+        per_layer_times=tuple(best_times),
+    )
+
+
+def uniform_total(table: ProfileTable, config: str, batch: int) -> float:
+    """Seconds/example when every layer uses `config` at `batch`
+    (the paper's naive-X / full-XYZ / CPU-only baselines, Fig. 5)."""
+    validate(config)
+    return sum(
+        table.times[batch][i][config]
+        for i in range(len(table.layer_labels))
+    )
+
+
+def best_uniform(table: ProfileTable, config: str) -> tuple:
+    """(batch, seconds/example) of the best batch size for a uniform
+    config — the strongest version of each baseline."""
+    cand = [
+        (uniform_total(table, config, b), b) for b in table.batch_sizes
+    ]
+    t, b = min(cand)
+    return b, t

@@ -1,0 +1,29 @@
+"""The per-layer implementation space (paper §II-C / §III-B).
+
+8 implementations per layer: CPU (sequential, host-placed) and the 7
+parallel configurations over the Data (X) / Window (Y) / Neuron (Z)
+aspects.
+"""
+
+from __future__ import annotations
+
+CPU = "CPU"
+ASPECT_CONFIGS = ("X", "Y", "Z", "XY", "XZ", "YZ", "XYZ")
+CONFIGS = (CPU,) + ASPECT_CONFIGS
+
+# paper Fig. 5 baselines
+NAIVE_GPU = "X"        # "naive": Data-only everywhere
+FULL_GPU = "XYZ"       # "fully-parallel": everything, max parallel
+
+
+def aspects_of(config: str) -> tuple:
+    """'XZ' -> ('X', 'Z'); 'CPU' -> ()."""
+    if config == CPU:
+        return ()
+    return tuple(config)
+
+
+def validate(config: str) -> str:
+    if config not in CONFIGS:
+        raise ValueError(f"unknown parallel config {config!r}")
+    return config

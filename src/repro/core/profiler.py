@@ -1,0 +1,200 @@
+"""Per-layer latency profiling (paper §III-A, Fig. 4).
+
+For every batch size and every layer, time all 8 implementations:
+``CPU`` (host-resident, no boundary cost) and the 7 aspect configs
+(kernel time + measured host<->device boundary cost, reproducing the
+paper's per-layer H2D/D2H transfers — §IV-A: "data transfer between CPU
+and GPU takes place before and after every layer's execution").
+
+Times are stored **seconds per example** so totals are comparable
+across batch sizes (the paper profiles the full test set per batch
+size; per-example normalization is equivalent).
+
+``time_source='measured'`` times real XLA executables on the host
+platform; ``'analytic'`` uses the TPU v5e cost model
+(``repro.core.cost_model``) — the dry-run-style path for hardware we
+cannot run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bnn import layers as L
+from repro.bnn.models import BNNModel, prepare_input_packed
+from repro.core import cost_model as cm
+from repro.core.parallel_config import ASPECT_CONFIGS, CONFIGS, CPU, aspects_of
+from repro.kernels.ops import xnor_gemm
+from repro.kernels.ref import xnor_gemm_ref
+from repro.kernels.variants import xnor_gemm_variant
+
+
+@dataclasses.dataclass
+class ProfileTable:
+    model_name: str
+    batch_sizes: tuple
+    layer_labels: tuple          # e.g. ('L1:C64', 'L2:MP14', ...)
+    # times[batch][layer_idx][config] -> seconds per example
+    times: dict
+
+    def best_config(self, batch: int, layer: int) -> tuple:
+        row = self.times[batch][layer]
+        cfg = min(row, key=row.get)
+        return cfg, row[cfg]
+
+
+def _timeit(fn: Callable[[], object], repeats: int) -> float:
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure_boundary(x_in: jax.Array, x_out: jax.Array, repeats: int) -> float:
+    """Host->device + device->host roundtrip cost for a layer's operand
+    and result (the paper's CPU-overhead term for GPU-mapped layers)."""
+    x_np = np.asarray(x_in)
+
+    def roundtrip():
+        dev = jnp.asarray(x_np)
+        jax.block_until_ready(dev)
+        return np.asarray(x_out)
+
+    return _timeit(roundtrip, repeats)
+
+
+def _layer_impls(spec: L.LayerSpec, packed: dict):
+    """Return {config: jitted fn} for one layer, all computing the packed
+    reference semantics."""
+    if spec.kind == "conv":
+        w, k_true = packed["w_words"], packed["k_true"]
+
+        def conv_for(cfg):
+            aspects = aspects_of(cfg)
+
+            @jax.jit
+            def f(x):
+                from repro.bnn.layers import extract_patch_words
+
+                b, h, ww, _ = x.shape
+                p = extract_patch_words(x).reshape(b, h * ww, -1)
+                if cfg == CPU:
+                    o = xnor_gemm_ref(p, w, k_true)
+                else:
+                    o = xnor_gemm_variant(p, w, k_true, frozenset(aspects))
+                return o.reshape(b, h, ww, -1)
+
+            return f
+
+        return {cfg: conv_for(cfg) for cfg in CONFIGS}
+
+    if spec.kind == "fc":
+        w, k_true = packed["w_words"], packed["k_true"]
+
+        def fc_for(cfg):
+            aspects = aspects_of(cfg)
+
+            @jax.jit
+            def f(x):
+                p = x[:, None, :]
+                if cfg == CPU:
+                    o = xnor_gemm_ref(p, w, k_true)
+                else:
+                    o = xnor_gemm_variant(p, w, k_true, frozenset(aspects))
+                return o[:, 0, :]
+
+            return f
+
+        return {cfg: fc_for(cfg) for cfg in CONFIGS}
+
+    # mp / step / flat: one computation; parallel configs differ only by
+    # the boundary cost the profiler adds (the paper's finding that these
+    # layers never win on GPU emerges from measurement, not fiat)
+    if spec.kind == "mp":
+        f = jax.jit(L.maxpool_packed)
+    elif spec.kind == "step":
+        t, fl = packed["thresh"], packed["flip"]
+        f = jax.jit(lambda x: L.step_packed(x, t, fl))
+    elif spec.kind == "flat":
+        c = spec.in_shape[-1]
+        f = jax.jit(lambda x: L.flat_packed(x, c))
+    else:  # pragma: no cover
+        raise ValueError(spec.kind)
+    return {cfg: f for cfg in CONFIGS}
+
+
+def _capture_layer_inputs(
+    model: BNNModel, packed_params: list, x_words: jax.Array
+) -> list:
+    """Run the packed reference forward, returning each layer's input."""
+    xs = []
+    x = x_words
+    for spec, p in zip(model.specs, packed_params):
+        xs.append(x)
+        if spec.kind == "conv":
+            x = L.conv_packed(x, p["w_words"], p["k_true"])
+        elif spec.kind == "mp":
+            x = L.maxpool_packed(x)
+        elif spec.kind == "step":
+            x = L.step_packed(x, p["thresh"], p["flip"])
+        elif spec.kind == "flat":
+            x = L.flat_packed(x, spec.in_shape[-1])
+        elif spec.kind == "fc":
+            x = L.fc_packed(x, p["w_words"], p["k_true"])
+    return xs
+
+
+def profile_bnn_model(
+    model: BNNModel,
+    packed_params: list,
+    *,
+    batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128),
+    configs: Sequence[str] = CONFIGS,
+    repeats: int = 3,
+    seed: int = 0,
+    time_source: str = "measured",
+) -> ProfileTable:
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
+    times: dict = {}
+    key = jax.random.PRNGKey(seed)
+
+    for batch in batch_sizes:
+        x01 = jax.random.uniform(
+            key, (batch, *model.input_hw, model.in_channels)
+        )
+        x_words = prepare_input_packed(x01)
+        layer_inputs = _capture_layer_inputs(model, packed_params, x_words)
+        per_layer: list = []
+        for spec, packed, x_in in zip(
+            model.specs, packed_params, layer_inputs
+        ):
+            if time_source == "analytic":
+                row = {
+                    cfg: cm.layer_time_tpu(spec, cfg, batch) / batch
+                    for cfg in configs
+                }
+                per_layer.append(row)
+                continue
+            impls = _layer_impls(spec, packed)
+            x_out = impls[CPU](x_in)
+            boundary = _measure_boundary(x_in, x_out, repeats)
+            row = {}
+            for cfg in configs:
+                t = _timeit(lambda f=impls[cfg]: f(x_in), repeats)
+                if cfg != CPU:
+                    t += boundary
+                row[cfg] = t / batch
+            per_layer.append(row)
+        times[batch] = per_layer
+
+    return ProfileTable(model.name, tuple(batch_sizes), labels, times)

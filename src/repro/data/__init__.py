@@ -1,0 +1,10 @@
+"""Deterministic synthetic data pipeline (this container is offline —
+no Fashion-MNIST/CIFAR downloads; see DESIGN.md §6). Streams are pure
+functions of (seed, step) so training resumes exactly after restart."""
+
+from repro.data.synthetic import (
+    make_image_dataset,
+    make_token_stream,
+    ImageDataset,
+)
+from repro.data.loader import ShardedBatcher

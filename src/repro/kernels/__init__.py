@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``xnor_popcount`` — the BNN binary GEMM (conv-as-GEMM and FC), grid
+  parameterized by the paper's X/Y/Z parallelism aspects (see DESIGN.md
+  §2): aspect axes become *parallel* grid dimensions, non-aspect axes
+  *arbitrary* (sequential) ones — the TPU-native analogue of CUDA
+  thread-block decomposition vs in-block serialization.
+* ``flash_attention`` — blockwise-softmax attention for LM prefill.
+
+Each kernel ships with ``ref.py`` (pure-jnp oracle) and ``ops.py``
+(jit'd entry points). ``variants.py`` holds the pure-XLA aspect-
+structured implementations that the live profiler times on the host
+platform (kernels are validated in interpret mode; their TPU cost comes
+from the analytic model in ``repro.core.cost_model``).
+"""
+
+from repro.kernels.ops import (
+    xnor_gemm,
+    binary_conv2d,
+    flash_attention,
+)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every kernel (the 'CPU' implementations in the
+paper's sense, and the ground truth for allclose tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xnor_gemm_ref(a: jax.Array, w: jax.Array, k_true: int) -> jax.Array:
+    """a (B,P,Kw) int32, w (N,Kw) int32 -> (B,P,N) int32."""
+    xn = ~(a[:, :, None, :] ^ w[None, None, :, :])
+    agree = jnp.sum(jax.lax.population_count(xn), axis=-1, dtype=jnp.int32)
+    return 2 * agree - k_true
+
+
+def binary_conv2d_ref(
+    x_words: jax.Array, w_words: jax.Array, k_true: int
+) -> jax.Array:
+    """Packed 3x3 SAME binary conv oracle (delegates to bnn.layers)."""
+    from repro.bnn.layers import conv_packed
+
+    return conv_packed(x_words, w_words, k_true)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive softmax attention oracle.
+
+    q (B,H,Sq,D); k,v (B,Hkv,Sk,D) with H a multiple of Hkv (GQA);
+    returns (B,H,Sq,D) float32.
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    group = H // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        # causal over the *suffix alignment*: query i attends to keys
+        # j <= i + (Sk - Sq) (standard decode/prefill convention)
+        qi = jnp.arange(Sq)[:, None]
+        kj = jnp.arange(Sk)[None, :]
+        mask = kj <= qi + (Sk - Sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))

@@ -1,0 +1,77 @@
+"""Pure-XLA aspect-structured implementations of the xnor GEMM.
+
+These are the 7 'GPU parallel configuration' implementations the live
+profiler actually *times* on the host platform: an aspect axis is
+vectorized (vmap — data-parallel), a non-aspect axis runs sequentially
+(lax.map — CUDA's in-block serialization). They compile to genuinely
+different XLA programs with genuinely different measured latencies,
+giving the HEP mapper a real heterogeneous cost surface on any
+platform, while computing the exact same function as ref.py / the
+Pallas kernel (asserted in tests).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import xnor_gemm_ref
+
+
+def _dot_word(a_k: jax.Array, w_k: jax.Array, k_true: int) -> jax.Array:
+    """(Kw,) x (Kw,) -> scalar exact binary dot."""
+    agree = jnp.sum(
+        jax.lax.population_count(~(a_k ^ w_k)), dtype=jnp.int32
+    )
+    return 2 * agree - k_true
+
+
+def xnor_gemm_variant(
+    a: jax.Array, w: jax.Array, k_true: int, aspects
+) -> jax.Array:
+    """a (B,P,Kw), w (N,Kw) -> (B,P,N); aspects subset of {X,Y,Z}."""
+    aspects = frozenset(aspects)
+
+    # innermost: one window against all neurons
+    if "Z" in aspects:
+        def per_window(a_k):  # (Kw,) -> (N,)
+            agree = jnp.sum(
+                jax.lax.population_count(~(a_k[None, :] ^ w)),
+                axis=-1, dtype=jnp.int32,
+            )
+            return 2 * agree - k_true
+    else:
+        def per_window(a_k):  # sequential over neurons
+            return jax.lax.map(lambda w_k: _dot_word(a_k, w_k, k_true), w)
+
+    # middle: one image (all windows)
+    if "Y" in aspects:
+        per_image = jax.vmap(per_window)
+    else:
+        def per_image(a_pk):
+            return jax.lax.map(per_window, a_pk)
+
+    # outer: batch
+    if "X" in aspects:
+        return jax.vmap(per_image)(a)
+    return jax.lax.map(per_image, a)
+
+
+def cpu_sequential(a: jax.Array, w: jax.Array, k_true: int) -> jax.Array:
+    """The paper's 'CPU' implementation: the plain fused XLA reference
+    (host-placed by the profiler)."""
+    return xnor_gemm_ref(a, w, k_true)
+
+
+ALL_VARIANTS: dict[str, object] = {
+    "CPU": cpu_sequential,
+    **{
+        cfg: partial_cfg
+        for cfg, partial_cfg in (
+            (name, partial(xnor_gemm_variant, aspects=frozenset(name)))
+            for name in ("X", "Y", "Z", "XY", "XZ", "YZ", "XYZ")
+        )
+    },
+}

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input
+shape) cell on the production meshes and record memory / cost /
+collective analyses for the roofline (EXPERIMENTS.md).
+
+MUST set XLA_FLAGS before ANY other import (jax locks the device count
+on first init) — hence the module's first two lines.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+
+Flop/byte totals use small-L twin compiles (L in {a, b}) and linear
+extrapolation — exact for homogeneous layer stacks since
+cost_analysis() counts scan bodies once (see hlo_analysis.py).
+Collective bytes come from the FULL compile with exact while-trip
+multiplication.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.transformer import param_specs
+from repro.optim import adamw
+from repro.parallel.sharding import (
+    ShardScheme,
+    default_scheme,
+    make_batch_shardings,
+    make_opt_shardings,
+    make_param_shardings,
+)
+
+# v5e constants (per chip) — EXPERIMENTS.md §Roofline
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def build_lowered(
+    cfg: ModelConfig, shape: str, mesh, scheme: ShardScheme | None = None,
+):
+    """Lower the cell's step function with shardings. Returns the
+    jax.stages.Lowered."""
+    from repro.parallel.constrain import scheme_context
+
+    scheme = scheme or default_scheme(cfg)
+    specs = C.input_specs(cfg, shape)
+    kind = C.SHAPES[shape].kind
+    ps_tree = param_specs(cfg)
+    p_sh = make_param_shardings(cfg, mesh, ps_tree, scheme)
+
+    with mesh, scheme_context(scheme):
+        if kind == "train":
+            opt = adamw(3e-4, state_dtype=jnp.bfloat16
+                        if cfg.n_params() > 1e11 else jnp.float32)
+            step = make_train_step(
+                cfg, opt, grad_compression="bf16",
+                accum_steps=scheme.accum_steps,
+            )
+            o_specs = jax.eval_shape(opt.init, ps_tree)
+            o_sh = make_opt_shardings(cfg, mesh, ps_tree, scheme, "adamw")
+            b_sh = make_batch_shardings(cfg, mesh, specs, scheme)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            return fn.lower(ps_tree, o_specs, specs)
+
+        if kind == "prefill":
+            prefill = make_prefill_step(cfg)
+            b_sh = make_batch_shardings(cfg, mesh, specs, scheme)
+            args = [specs["tokens"]]
+            shardings = [b_sh["tokens"]]
+            if "frontend_embeds" in specs:
+                args.append(specs["frontend_embeds"])
+                shardings.append(b_sh["frontend_embeds"])
+            # pin the returned KV cache's sharding (heads/head_dim over
+            # 'model', batch over 'data') — otherwise XLA may leave the
+            # (L,B,S,Hkv,hd) cache head-replicated (+8.6 GiB/dev on
+            # olmo prefill_32k)
+            from repro.parallel.sharding import make_cache_shardings
+
+            _, cache_sds = jax.eval_shape(prefill, ps_tree, *args)
+            c_sh = make_cache_shardings(
+                cfg, mesh, cache_sds, scheme, allow_hd=False
+            )
+            fn = jax.jit(
+                prefill,
+                in_shardings=(p_sh, *shardings),
+                out_shardings=(None, c_sh),
+            )
+            return fn.lower(ps_tree, *args)
+
+        # decode
+        serve = make_serve_step(cfg)
+        b_sh = make_batch_shardings(cfg, mesh, specs, scheme)
+        fn = jax.jit(
+            serve,
+            in_shardings=(p_sh, b_sh["cache"], b_sh["token"]),
+            out_shardings=(None, b_sh["cache"]),
+            donate_argnums=(1,),
+        )
+        return fn.lower(ps_tree, specs["cache"], specs["token"])
+
+
+def run_cell(
+    arch: str, shape: str, *, multi_pod: bool,
+    scheme: ShardScheme | None = None, extrapolate: bool = True,
+) -> dict:
+    cfg = C.get(arch)
+    if not C.cell_supported(cfg, shape):
+        return {
+            "arch": arch, "shape": shape, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "long_500k needs sub-quadratic attention "
+                      "(full-attention arch; see DESIGN.md)",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    lowered = build_lowered(cfg, shape, mesh, scheme)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    txt = compiled.as_text()
+    coll = H.collective_bytes(txt, n_dev)
+    flops_pd = H.dot_flops(txt)
+    bytes_pd = H.hbm_bytes(txt)
+
+    out = {
+        "arch": arch, "shape": shape,
+        "multi_pod": multi_pod, "devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes
+            ),
+        },
+        "collectives": {
+            "per_device_bytes": coll.total_bytes,
+            "by_kind_bytes": coll.bytes_by_kind,
+            "by_kind_count": coll.count_by_kind,
+        },
+        "whiles": H.while_summary(txt)[:12],
+        "per_device": {
+            "hlo_flops": flops_pd,   # dot flops, trip-corrected
+            "hlo_bytes": bytes_pd,   # approx HBM traffic, trip-corrected
+        },
+    }
+    return out
+
+
+def roofline_terms(result: dict, cfg: ModelConfig, shape: str) -> dict:
+    """The three §Roofline terms, in seconds (per step)."""
+    pd = result.get("per_device", {})
+    flops = pd.get("hlo_flops", 0.0)
+    bytes_ = pd.get("hlo_bytes", 0.0)
+    coll = result["collectives"]["per_device_bytes"]
+    compute_s = flops / PEAK_BF16
+    memory_s = bytes_ / HBM_BW
+    collective_s = coll / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    sh = C.SHAPES[shape]
+    n_tok = sh.batch * (sh.seq if sh.kind == "train" else
+                        (sh.seq if sh.kind == "prefill" else 1))
+    mult = 3 if sh.kind == "train" else 1  # fwd+bwd
+    model_flops = 2 * mult * cfg.n_active_params() * n_tok
+    denom = flops * result["devices"]
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / denom if denom else 0.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("off", "on", "both"),
+                    default="off")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = C.ARCH_NAMES if (args.all or not args.arch) else (
+        C.canonical(args.arch),)
+    shapes = tuple(C.SHAPES) if (args.all or not args.shape) else (
+        args.shape,)
+    pods = {"off": (False,), "on": (True,), "both": (False, True)}[
+        args.multi_pod]
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    summary = []
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        fp = outdir / f"{tag}.json"
+        if fp.exists():
+            r = json.loads(fp.read_text())
+            print(f"[cached ] {tag}: {r['status']}")
+            summary.append(r)
+            continue
+        print(f"[running] {tag} ...", flush=True)
+        try:
+            r = run_cell(arch, shape, multi_pod=mp,
+                         extrapolate=not args.no_extrapolate)
+            if r["status"] == "ok":
+                cfg = C.get(arch)
+                r["roofline"] = roofline_terms(r, cfg, shape)
+                print(
+                    f"    ok: compile {r['compile_s']}s, "
+                    f"peak {r['memory']['peak_bytes_per_device']/2**30:.2f} "
+                    f"GiB/dev, coll {r['collectives']['per_device_bytes']/2**30:.2f} "
+                    f"GiB/dev, dominant={r['roofline']['dominant']}",
+                    flush=True,
+                )
+            else:
+                print(f"    {r['status']}: {r.get('reason','')}", flush=True)
+        except Exception as e:  # record failures — they are bugs
+            r = {
+                "arch": arch, "shape": shape, "multi_pod": mp,
+                "status": "error", "error": repr(e),
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"    ERROR: {e!r}", flush=True)
+        fp.write_text(json.dumps(r, indent=2, default=float))
+        summary.append(r)
+
+    ok = sum(1 for r in summary if r["status"] == "ok")
+    sk = sum(1 for r in summary if r["status"] == "skipped")
+    er = sum(1 for r in summary if r["status"] == "error")
+    print(f"\n=== dry-run: {ok} ok, {sk} skipped(by-design), {er} errors ===")
+    (outdir / "summary.json").write_text(
+        json.dumps(summary, indent=2, default=float)
+    )
+    return 0 if er == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,50 @@
+"""Serving launcher: prefill a batch of prompts, then decode tokens
+autoregressively with the KV/SSM cache (greedy).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2_130m \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.models.steps import greedy_decode
+from repro.models.transformer import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch) if args.full else C.get_smoke(args.arch)
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    t0 = time.perf_counter()
+    toks = greedy_decode(
+        cfg, params, prompt, n_steps=args.gen,
+        max_len=args.prompt_len + args.gen,
+    )
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    n = args.batch * args.gen
+    print(f"generated {n} tokens in {dt:.2f}s "
+          f"({n/dt:.1f} tok/s incl. compile)")
+    print("sample:", jnp.asarray(toks[0, :12]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Training launcher: real training on the available devices (the
+dry-run sibling proves the production-mesh distribution compiles; this
+driver actually steps — on TPU pods it is the entry point, on this CPU
+container it runs reduced configs).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b \
+        --steps 50 --batch 8 --seq 128 [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.data import make_token_stream
+from repro.models.steps import make_train_step
+from repro.models.transformer import init_params
+from repro.optim import adamw, linear_warmup_cosine
+from repro.runtime import LoopConfig, TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (TPU-scale)")
+    ap.add_argument("--ckpt", default="results/train_ckpt")
+    ap.add_argument("--save-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch) if args.full else C.get_smoke(args.arch)
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M "
+          f"devices={jax.device_count()}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(linear_warmup_cosine(args.lr, 10, args.steps))
+    raw = make_train_step(cfg, opt, accum_steps=args.accum)
+    sample = make_token_stream(0, cfg.vocab)
+
+    @jax.jit
+    def step_fn(state, batch):
+        p, o = state
+        p, o, m = raw(p, o, batch)
+        return (p, o), m
+
+    def batch_fn(step):
+        toks = sample(step, args.batch, args.seq)
+        b = {"tokens": toks, "labels": toks}
+        if cfg.n_frontend_embeds:
+            b["frontend_embeds"] = jnp.zeros(
+                (args.batch, cfg.n_frontend_embeds, cfg.d_model), cfg.dtype
+            )
+        return b
+
+    loop = TrainLoop(
+        step_fn, batch_fn, (params, opt.init(params)),
+        LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt,
+                   save_every=args.save_every, async_save=True),
+    )
+    loop.restore_if_available()
+    out = loop.run()
+    last = out["metrics"][-1] if out["metrics"] else {}
+    print(f"done at step {out['final_step']}; "
+          f"final loss {last.get('loss', float('nan')):.4f}")
+
+
+if __name__ == "__main__":
+    main()

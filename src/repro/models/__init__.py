@@ -1,0 +1,29 @@
+"""LM substrate for the assigned architectures.
+
+One flexible decoder covers the five families:
+  dense / vlm / audio — GQA attention + (gated) MLP blocks
+  moe                 — shared + routed experts (top-k, capacity-based)
+  ssm                 — Mamba2 SSD blocks (attention-free)
+  hybrid              — Mamba2 backbone + shared attention block (zamba2)
+
+All stacked layers run under ``jax.lax.scan`` (small HLO, fast 512-dev
+compiles); attention uses pure-XLA chunked blockwise softmax for long
+contexts (the Pallas flash kernel is the TPU drop-in, validated in
+tests).
+"""
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.transformer import (
+    init_params,
+    param_specs,
+    forward,
+    Cache,
+    init_cache,
+    cache_specs,
+)
+from repro.models.steps import (
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+    loss_fn,
+)

@@ -1,0 +1,236 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form for
+train/prefill, O(1) recurrent form for decode.
+
+Chunked SSD (Dao & Gu 2024, §6): split the sequence into chunks of Q
+tokens; within a chunk the output is an attention-like quadratic term
+(intra), across chunks a (P,N)-state recurrence (inter) propagated with
+a lax.scan — sub-quadratic in S and the reason ssm/hybrid archs run the
+long_500k shape.
+
+Shapes: x (B,S,H,P) head inputs, dt (B,S,H) softplus'd step sizes,
+A (H,) negative decay rates, Bm/Cm (B,S,G,N) input/output projections
+(G groups broadcast over H heads), state (B,H,P,N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.modules import rms_norm
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int,
+    h0: jax.Array | None = None,
+):
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rep = H // G
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3).astype(f32)
+
+    dA = dtc * A.astype(f32)                     # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                 # inclusive cumsum
+
+    # --- intra-chunk (quadratic within Q) ---
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(
+        mask[None, None, :, :, None], jnp.exp(diff), 0.0
+    ).transpose(0, 1, 4, 2, 3)                   # (B,nc,H,Q,K)
+    scores = CB * M * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # --- chunk-end states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    S_chunk = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", Bc, decay_to_end * dtc, xc
+    )                                            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])      # (B,nc,H)
+
+    # --- inter-chunk recurrence over nc ---
+    h_init = (
+        jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+    )
+
+    def body(h, inputs):
+        s_c, dec = inputs                        # (B,H,P,N), (B,H)
+        h_new = dec[..., None, None] * h + s_c
+        return h_new, h                          # emit state BEFORE chunk
+
+    (h_final, states_before) = jax.lax.scan(
+        body,
+        h_init,
+        (
+            S_chunk.transpose(1, 0, 2, 3, 4),    # (nc,B,H,P,N)
+            chunk_decay.transpose(1, 0, 2),      # (nc,B,H)
+        ),
+    )
+    states_before = states_before.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp", Cc * jnp.exp(cum)[..., None], states_before
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    x: jax.Array,        # (B,H,P) single token
+    dt: jax.Array,       # (B,H)
+    A: jax.Array,        # (H,)
+    Bm: jax.Array,       # (B,G,N)
+    Cm: jax.Array,       # (B,G,N)
+    h: jax.Array,        # (B,H,P,N)
+):
+    """O(1) recurrent update. Returns (y (B,H,P), new_h)."""
+    G = Bm.shape[1]
+    H = x.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(f32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(f32)
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))   # (B,H)
+    upd = jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt.astype(f32), x.astype(f32), Bh
+    )
+    h_new = dA[..., None, None] * h.astype(f32) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Depthwise causal conv via shift-add (kernel K small).
+    x (B,S,C); w (K,C); b (C,)."""
+    K = w.shape[0]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_decode_step(x: jax.Array, conv_buf: jax.Array, w, b):
+    """x (B,C) new input; conv_buf (B,K,C) ring of the last K inputs
+    (oldest first). Returns (y (B,C), new_buf)."""
+    new_buf = jnp.concatenate([conv_buf[:, 1:], x[:, None, :]], axis=1)
+    y = jnp.einsum("bkc,kc->bc", new_buf.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x.dtype), new_buf
+
+
+def mamba_block(
+    cfg: ModelConfig,
+    x: jax.Array,          # (B,S,d)
+    p: dict,
+    *,
+    cache: dict | None = None,
+):
+    """Full Mamba2 block. With cache (decode): S must be 1; returns
+    (out, new_cache). Without: returns (out, final_cache_state) where
+    final state seeds a decode cache (prefill handoff).
+
+    Projections are separate tensors (z / x / BC / dt) so TP sharding
+    of d_inner never crosses a fused split point (see sharding.py)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    din = cfg.d_inner
+    H = cfg.ssm_heads
+    P = s.head_dim
+    G, N = s.n_groups, s.d_state
+    gn = G * N
+
+    z = x @ p["in_z"]                  # (B,S,din)
+    xi_raw = x @ p["in_x"]             # (B,S,din)
+    bc_raw = x @ p["in_bc"]            # (B,S,2gn)
+    dt = x @ p["in_dt"]                # (B,S,H)
+
+    if cache is None:
+        xi = jax.nn.silu(causal_conv1d(xi_raw, p["conv_x_w"], p["conv_x_b"]))
+        bc = jax.nn.silu(causal_conv1d(bc_raw, p["conv_bc_w"], p["conv_bc_b"]))
+        Bm, Cm = jnp.split(bc, [gn], axis=-1)
+        dt_sp = jax.nn.softplus(
+            dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+        )
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, h_final = ssd_chunked(
+            xi.reshape(B, S, H, P),
+            dt_sp,
+            A,
+            Bm.reshape(B, S, G, N),
+            Cm.reshape(B, S, G, N),
+            chunk=s.chunk,
+        )
+        y = y + p["D"].astype(y.dtype)[None, None, :, None] * xi.reshape(
+            B, S, H, P
+        )
+        y = y.reshape(B, S, din)
+        y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                     p["gnorm"])
+        out = y @ p["out_proj"]
+        # conv tails for decode handoff: the K most recent raw inputs
+        # (cache copies constrained like the decode-cache layout)
+        from repro.parallel.constrain import constrain, constrain_ssd
+
+        K = s.conv_kernel
+
+        def tail(r):
+            t = r[:, -K:, :] if S >= K else jnp.pad(
+                r, ((0, 0), (K - S, 0), (0, 0))
+            )
+            return constrain(t, ("pod", "data"), None, "model")
+
+        return out, {
+            "conv_x": tail(xi_raw), "conv_bc": tail(bc_raw),
+            "ssd": constrain_ssd(h_final),
+        }
+
+    # ---- decode: S == 1 ----
+    xi_t, new_conv_x = conv_decode_step(
+        xi_raw[:, 0], cache["conv_x"], p["conv_x_w"], p["conv_x_b"]
+    )
+    bc_t, new_conv_bc = conv_decode_step(
+        bc_raw[:, 0], cache["conv_bc"], p["conv_bc_w"], p["conv_bc_b"]
+    )
+    xi_t = jax.nn.silu(xi_t)
+    bc_t = jax.nn.silu(bc_t)
+    Bm, Cm = jnp.split(bc_t, [gn], axis=-1)
+    dt_t = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = ssd_decode_step(
+        xi_t.reshape(B, H, P), dt_t, A,
+        Bm.reshape(B, G, N), Cm.reshape(B, G, N),
+        cache["ssd"],
+    )
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xi_t.reshape(B, H, P)
+    y = y.reshape(B, 1, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gnorm"])
+    out = y @ p["out_proj"]
+    return out, {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssd": h_new}

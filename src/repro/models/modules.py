@@ -1,0 +1,222 @@
+"""Shared neural modules: norms, RoPE, chunked attention, MLPs.
+
+Numerics policy: activations in cfg.dtype (bf16), norms and softmax in
+f32, residual stream in bf16.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def nonparam_layernorm(x: jax.Array, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale, no bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, scale: jax.Array | None):
+    if kind == "rms":
+        return rms_norm(x, scale)
+    if kind == "nonparam":
+        return nonparam_layernorm(x)
+    raise ValueError(kind)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D); positions (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (...,S,half)
+    cos = jnp.cos(ang)[..., None, :]                        # (...,S,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xr1 = x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin
+    xr2 = x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin
+    return jnp.concatenate([xr1, xr2], axis=-1).astype(x.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int,
+    kv_chunk: int,
+    kv_offset: int = 0,
+    remat_chunks: bool = True,
+) -> jax.Array:
+    """Memory-efficient blockwise-softmax attention in pure XLA (the
+    flash pattern; the Pallas kernel in repro.kernels is the TPU
+    drop-in with identical semantics, cross-checked in tests).
+
+    q (B,Sq,H,D); k,v (B,Sk,Hkv,D). Causal uses suffix alignment:
+    query i attends to keys j <= i + kv_offset (kv_offset = Sk - Sq for
+    aligned prefill). Returns (B,Sq,H,D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    # pad to multiples
+    if nq * q_chunk != Sq:
+        q = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    if nk * kv_chunk != Sk:
+        pad = nk * kv_chunk - Sk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qc = q.reshape(B, nq, q_chunk, H, D)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, D)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, D)
+
+    def q_body(_, iq):
+        qi = qc[:, iq]  # (B, qc, H, D)
+
+        def kv_body(carry, ik):
+            m, l, acc = carry
+            ki = kc[:, ik]  # (B, kc, Hkv, D)
+            vi = vc[:, ik]
+            kg = jnp.repeat(ki, group, axis=2)
+            vg = jnp.repeat(vi, group, axis=2)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk",
+                qi.astype(jnp.float32),
+                kg.astype(jnp.float32),
+            ) * scale
+            qpos = iq * q_chunk + jnp.arange(q_chunk)
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            valid = (kpos < Sk)[None, None, None, :]
+            if causal:
+                valid = valid & (
+                    kpos[None, None, None, :]
+                    <= qpos[None, None, :, None] + kv_offset
+                )
+            s = jnp.where(valid, s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bqhd", p, vg.astype(jnp.float32)
+            ).transpose(0, 2, 1, 3)          # (B,H,qc,D)
+            acc_new = acc * alpha + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), jnp.arange(nk)
+        )
+        out = (acc / l).transpose(0, 2, 1, 3)  # (B, qc, H, D)
+        return None, out.astype(q.dtype)
+
+    body = jax.checkpoint(q_body) if remat_chunks else q_body
+    _, out = jax.lax.scan(body, None, jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def chunked_attention_kv_parallel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int,
+    n_kv_parts: int = 16,
+    remat_chunks: bool = True,
+) -> jax.Array:
+    """Context-parallel attention: the KV sequence is split into
+    `n_kv_parts` parts constrained over the 'model' axis; each part
+    computes a blockwise-softmax partial (m, l, acc) and the parts are
+    combined with a log-sum-exp merge — the cross-part contraction is
+    the ONLY collective (an (B,H,qc,hd)-sized all-reduce per q chunk),
+    unlike head-sharded attention with indivisible head counts where
+    GSPMD partial-sums every score block (qwen2.5: 40H/16 -> 960 GiB/dev
+    per step; EXPERIMENTS.md §Perf qwen iteration 5)."""
+    from repro.parallel.constrain import constrain
+
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = H // Hkv
+    scale = D ** -0.5
+    assert Sk % n_kv_parts == 0
+    kp = Sk // n_kv_parts
+    q_chunk = min(q_chunk, Sq)
+    nq = -(-Sq // q_chunk)
+    if nq * q_chunk != Sq:
+        q = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    qc = q.reshape(B, nq, q_chunk, H, D)
+    kc = k.reshape(B, n_kv_parts, kp, Hkv, D)
+    vc = v.reshape(B, n_kv_parts, kp, Hkv, D)
+    kc = constrain(kc, ("pod", "data"), "model", None, None, None)
+    vc = constrain(vc, ("pod", "data"), "model", None, None, None)
+    kg = jnp.repeat(kc, group, axis=3)
+    vg = jnp.repeat(vc, group, axis=3)
+    kpos = jnp.arange(Sk).reshape(n_kv_parts, kp)
+
+    def q_body(_, iq):
+        qi = qc[:, iq].astype(jnp.float32)          # (B,qc,H,D)
+        s = jnp.einsum(
+            "bqhd,bnkhd->bnhqk", qi, kg.astype(jnp.float32)
+        ) * scale                                    # (B,n,H,qc,kp)
+        qpos = iq * q_chunk + jnp.arange(q_chunk)
+        valid = kpos[None, :, None, None, :] <= (
+            qpos[None, None, None, :, None] + (Sk - Sq)
+        ) if causal else jnp.ones((), bool)
+        s = jnp.where(valid, s, _NEG)
+        m_n = jnp.max(s, axis=-1, keepdims=True)     # (B,n,H,qc,1)
+        p = jnp.exp(s - m_n)
+        l_n = jnp.sum(p, axis=-1, keepdims=True)
+        acc_n = jnp.einsum("bnhqk,bnkhd->bnhqd", p, vg.astype(jnp.float32))
+        # log-sum-exp combine across the sharded part dim
+        m = jnp.max(m_n, axis=1, keepdims=True)      # (B,1,H,qc,1)
+        w = jnp.exp(m_n - m)
+        l = jnp.sum(l_n * w, axis=1)                 # (B,H,qc,1)
+        acc = jnp.sum(acc_n * w, axis=1)             # (B,H,qc,D)
+        out = (acc / l).transpose(0, 2, 1, 3)        # (B,qc,H,D)
+        return None, out.astype(q.dtype)
+
+    body = jax.checkpoint(q_body) if remat_chunks else q_body
+    _, out = jax.lax.scan(body, None, jnp.arange(nq))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def gated_mlp(x: jax.Array, wg, wu, wd) -> jax.Array:
+    """SiLU-gated MLP (llama family)."""
+    g = jax.nn.silu(x @ wg)
+    return ((g * (x @ wu)) @ wd).astype(x.dtype)
+
+
+def gelu_mlp(x: jax.Array, wu, wd) -> jax.Array:
+    return (jax.nn.gelu(x @ wu) @ wd).astype(x.dtype)
+
+
+def relu2_mlp(x: jax.Array, wu, wd) -> jax.Array:
+    """Squared-ReLU MLP (nemotron/minitron family)."""
+    h = jax.nn.relu(x @ wu)
+    return ((h * h) @ wd).astype(x.dtype)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts layer: shared + routed experts with top-k routing
+and GROUPED capacity-based dispatch (SPMD-friendly).
+
+Dispatch is computed independently per token group (group = one batch
+row), so every routing primitive (cumsum for position-in-expert,
+scatter into the expert buffer) is local to a group and parallelizes
+over the data axis — a global flat-token cumsum would force GSPMD to
+replicate the whole token stream (observed: ~60 TiB/dev collectives on
+grok before this design; EXPERIMENTS.md §Perf iteration 0).
+
+Flow per group g (vmapped over G groups):
+  1. router logits -> top-k (expert_id, gate)
+  2. position-within-expert via per-group cumulative one-hot counts
+  3. scatter token activations into a (E, C_g, d) buffer (overflow
+     dropped — DeepSeek's shared experts still cover dropped tokens)
+  4. buffers stacked (G, E, C_g, d), sharding-constrained to
+     (data, model/EP, None, None) -> XLA inserts the all-to-all
+  5. batched expert FFN einsum over (E@model)
+  6. gather back per group, combine with gates
+
+Shared experts are fused into one wider gated MLP (mathematically
+identical to summing n_shared experts of width d_expert).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.constrain import constrain
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def route(router_logits: jax.Array, top_k: int):
+    """(T, E) -> normalized gates (T, k) + expert ids (T, k)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, ids
+
+
+def _dispatch_group(x_g, ids_g, C: int, E: int):
+    """x_g (Tg, d); ids_g (Tg, k). Returns (buf (E, C, d), keep (Tg*k,),
+    safe_e, safe_c) for one group."""
+    Tg, d = x_g.shape
+    k = ids_g.shape[1]
+    flat_ids = ids_g.reshape(-1)                       # (Tg*k,)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - onehot, flat_ids[:, None], axis=1
+    )[:, 0]
+    keep = pos < C
+    safe_e = jnp.where(keep, flat_ids, 0)
+    safe_c = jnp.where(keep, pos, C)                   # C = trash column
+    xk = jnp.repeat(x_g, k, axis=0)                    # (Tg*k, d)
+    buf = jnp.zeros((E, C + 1, d), x_g.dtype).at[safe_e, safe_c].add(xk)
+    return buf[:, :C, :], keep, safe_e, safe_c
+
+
+def moe_ffn(
+    x: jax.Array,           # (G, Tg, d) grouped tokens (G = batch rows)
+    p: dict,                # router (d,E); wg/wu (E,d,Fe); wd (E,Fe,d)
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (G, Tg, d), aux load-balance loss)."""
+    m = cfg.moe
+    G, Tg, d = x.shape
+    E, k = m.n_experts, m.top_k
+    C = capacity(cfg, Tg)
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, ids = route(logits.reshape(G * Tg, E), k)
+    gates = gates.reshape(G, Tg, k)
+    ids = ids.reshape(G, Tg, k)
+
+    buf, keep, safe_e, safe_c = jax.vmap(
+        lambda xg, ig: _dispatch_group(xg, ig, C, E)
+    )(x, ids)                                          # buf (G,E,C,d)
+    # EP boundary: groups over data, experts over model (all-to-all)
+    buf = constrain(buf, ("pod", "data"), "model", None, None)
+
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"]))
+    u = jnp.einsum("gecd,edf->gecf", buf, p["wu"])
+    y = jnp.einsum("gecf,efd->gecd", g * u, p["wd"])   # (G,E,C,d)
+    # combine boundary: bring every expert's outputs back to the
+    # owning group's shard BEFORE the local gather (this resharding is
+    # the combine all-to-all; gathering across a model-sharded E dim
+    # instead makes GSPMD emit token*k*d-sized all-reduces per layer)
+    y = constrain(y, ("pod", "data"), None, None, None)
+
+    def gather_group(y_g, keep_g, se, sc, gates_g):
+        yk = y_g[se, jnp.minimum(sc, C - 1)]           # (Tg*k, d)
+        yk = jnp.where(keep_g[:, None], yk, 0.0)
+        yk = yk.reshape(Tg, k, d) * gates_g[..., None].astype(yk.dtype)
+        return jnp.sum(yk, axis=1)
+
+    out = jax.vmap(gather_group)(y, keep, safe_e, safe_c, gates)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    probs_mean = jnp.mean(
+        jax.nn.softmax(logits.reshape(G * Tg, E), -1), axis=0
+    )
+    frac = jnp.mean(
+        jax.nn.one_hot(ids.reshape(G * Tg, k), E, dtype=jnp.float32).sum(1),
+        axis=0,
+    ) / k
+    aux = E * jnp.sum(frac * probs_mean)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,597 @@
+"""Unified decoder: dense / MoE / SSM / hybrid / VLM / audio backbones.
+
+Layer stacking always uses ``jax.lax.scan`` over stacked params
+(leading L axis) — small HLO, per-layer remat, and decode caches ride
+the scan as xs/ys. The hybrid (zamba2) family scans 6-layer Mamba
+segments with a weight-shared attention block applied between segments.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as M
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import mamba_block
+from repro.models.moe import moe_ffn
+from repro.parallel.constrain import (
+    attn_kv_parallel_enabled, constrain, constrain_kv, constrain_ssd,
+    pin_batch, sp_residual_enabled,
+)
+
+_BATCH_AXES = ("pod", "data")
+
+
+def _pin_residual(x: jax.Array) -> jax.Array:
+    """Pin the residual stream to (batch@data-axes, seq, d replicated).
+    Without this GSPMD may trade the batch sharding away to satisfy
+    ZeRO-3 weight shardings, replicating (L,B,S,d)-sized backward
+    residuals per device (observed on grok: +96 GiB/dev). Batch axes
+    follow the scheme policy (small archs fold 'model' in). Under
+    sequence parallelism the seq dim additionally shards over 'model'
+    (saved residuals /16; GSPMD inserts the SP all-gather before
+    projections)."""
+    seq_ax = "model" if sp_residual_enabled() else None
+    return pin_batch(x, seq_ax, None)
+
+Cache = dict  # {'k','v','len'} or {'conv','ssd','len'} or hybrid union
+
+
+# ---------------------------------------------------------------------------
+# Parameter shape definitions (shared by init_params / param_specs)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_shapes(cfg: ModelConfig, prefix_l: tuple) -> dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sh = {
+        "wq": prefix_l + (d, H * hd),
+        "wk": prefix_l + (d, Hkv * hd),
+        "wv": prefix_l + (d, Hkv * hd),
+        "wo": prefix_l + (H * hd, d),
+    }
+    if cfg.qkv_bias:
+        sh |= {
+            "bq": prefix_l + (H * hd,),
+            "bk": prefix_l + (Hkv * hd,),
+            "bv": prefix_l + (Hkv * hd,),
+        }
+    return sh
+
+
+def _mlp_shapes(cfg: ModelConfig, prefix_l: tuple, d_ff: int) -> dict:
+    d = cfg.d_model
+    if cfg.mlp_type == "silu":
+        return {
+            "wg": prefix_l + (d, d_ff),
+            "wu": prefix_l + (d, d_ff),
+            "wd": prefix_l + (d_ff, d),
+        }
+    return {"wu": prefix_l + (d, d_ff), "wd": prefix_l + (d_ff, d)}
+
+
+def _mamba_shapes(cfg: ModelConfig, prefix_l: tuple) -> dict:
+    """Projections kept SEPARATE (not fused) so each output dim shards
+    cleanly over the model axis without split-point resharding."""
+    s = cfg.ssm
+    d, din = cfg.d_model, cfg.d_inner
+    gn = s.n_groups * s.d_state
+    H = cfg.ssm_heads
+    return {
+        "in_z": prefix_l + (d, din),
+        "in_x": prefix_l + (d, din),
+        "in_bc": prefix_l + (d, 2 * gn),
+        "in_dt": prefix_l + (d, H),
+        "conv_x_w": prefix_l + (s.conv_kernel, din),
+        "conv_x_b": prefix_l + (din,),
+        "conv_bc_w": prefix_l + (s.conv_kernel, 2 * gn),
+        "conv_bc_b": prefix_l + (2 * gn,),
+        "A_log": prefix_l + (H,),
+        "D": prefix_l + (H,),
+        "dt_bias": prefix_l + (H,),
+        "gnorm": prefix_l + (din,),
+        "out_proj": prefix_l + (din, d),
+    }
+
+
+def _shape_tree(cfg: ModelConfig) -> dict:
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    lp = (L,)
+    tree: dict = {"embed": (V, d)}
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (d, V)
+    if cfg.norm == "rms":
+        tree["final_norm"] = (d,)
+
+    if cfg.family == "ssm":
+        blocks = {"mamba": _mamba_shapes(cfg, lp)}
+        if cfg.norm == "rms":
+            blocks["ln1"] = lp + (d,)
+        tree["blocks"] = blocks
+        return tree
+
+    if cfg.family == "hybrid":
+        blocks = {"mamba": _mamba_shapes(cfg, lp)}
+        if cfg.norm == "rms":
+            blocks["ln1"] = lp + (d,)
+        tree["blocks"] = blocks
+        shared = {
+            "attn": _attn_block_shapes(cfg, ()),
+            "mlp": _mlp_shapes(cfg, (), cfg.d_ff),
+        }
+        if cfg.norm == "rms":
+            shared["ln1"] = (d,)
+            shared["ln2"] = (d,)
+        tree["shared"] = shared
+        return tree
+
+    blocks: dict = {"attn": _attn_block_shapes(cfg, lp)}
+    if cfg.norm == "rms":
+        blocks["ln1"] = lp + (d,)
+        blocks["ln2"] = lp + (d,)
+    if cfg.moe:
+        fe = cfg.moe.d_expert or cfg.d_ff
+        E = cfg.moe.n_experts
+        blocks["moe"] = {
+            "router": lp + (d, E),
+            "wg": lp + (E, d, fe),
+            "wu": lp + (E, d, fe),
+            "wd": lp + (E, fe, d),
+        }
+        if cfg.moe.n_shared:
+            blocks["mlp"] = _mlp_shapes(cfg, lp, cfg.moe.n_shared * fe)
+    else:
+        blocks["mlp"] = _mlp_shapes(cfg, lp, cfg.d_ff)
+    tree["blocks"] = blocks
+    return tree
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda sh: jax.ShapeDtypeStruct(sh, dt),
+        _shape_tree(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
+    """Real initialization (smoke tests / examples; dry-run never calls
+    this). Scaled-normal for matmuls, ones for norm scales, SSD-specific
+    init for A_log/dt_bias."""
+    dt = jnp.dtype(cfg.dtype)
+    shapes = _shape_tree(cfg)
+    leaves, treedef = jax.tree.flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    paths = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(path, sh, k):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln1", "ln2", "final_norm", "gnorm"):
+            return jnp.ones(sh, dt)
+        if name in ("conv_b", "bq", "bk", "bv", "D"):
+            return jnp.zeros(sh, dt) if name != "D" else jnp.ones(sh, dt)
+        if name == "A_log":
+            # A in [1, 16) as in mamba2 reference init
+            u = jax.random.uniform(k, sh, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        if name == "dt_bias":
+            # dt ~ U[1e-3, 1e-1] through softplus-inverse
+            u = jax.random.uniform(k, sh, jnp.float32, 1e-3, 1e-1)
+            return jnp.log(jnp.expm1(u)).astype(dt)
+        fan_in = sh[-2] if len(sh) >= 2 else sh[-1]
+        return (
+            jax.random.normal(k, sh, jnp.float32) / math.sqrt(fan_in)
+        ).astype(dt)
+
+    inits = [
+        init_one(p, sh, k) for (p, sh), k in zip(paths, keys)
+    ]
+    return jax.tree.unflatten(treedef, inits)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _proj_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = M.rope(q, positions, cfg.rope_theta)
+    k = M.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_full(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    """Train / prefill attention. Returns (out, (k, v)).
+
+    The kv returned for the cache are sharding-constrained COPIES —
+    constraining the values the attention itself consumes would
+    back-propagate the cache layout into the chunked softmax (see
+    constrain_kv)."""
+    q, k, v = _proj_qkv(cfg, p, x, positions)
+    if attn_kv_parallel_enabled():
+        o = M.chunked_attention_kv_parallel(
+            q, k, v, causal=True,
+            q_chunk=cfg.attn_q_chunk, remat_chunks=cfg.remat,
+        )
+    else:
+        o = M.chunked_attention(
+            q, k, v, causal=True,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+            remat_chunks=cfg.remat,
+        )
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, -1) @ p["wo"]
+    return out, (constrain_kv(k), constrain_kv(v))
+
+
+def attn_decode(
+    cfg: ModelConfig, p: dict, x: jax.Array,
+    cache_k: jax.Array, cache_v: jax.Array, cache_len: jax.Array,
+):
+    """Single-token decode against a (B, Smax, Hkv, hd) cache.
+    Grouped einsum avoids materializing repeated KV heads."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = H // Hkv
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q, k, v = _proj_qkv(cfg, p, x, positions)
+    new_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, cache_len, 0, 0)
+    )
+    new_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, cache_len, 0, 0)
+    )
+    qg = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs",
+        qg.astype(jnp.float32), new_k.astype(jnp.float32),
+    ) * (hd ** -0.5)                              # (B,Hkv,g,Smax)
+    kpos = jnp.arange(new_k.shape[1])
+    s = jnp.where(kpos[None, None, None, :] <= cache_len, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskd->bkgd", w, new_v.astype(jnp.float32)
+    ).astype(x.dtype)
+    out = o.reshape(B, 1, H * hd) @ p["wo"]
+    return out, (new_k, new_v)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "silu":
+        return M.gated_mlp(x, p["wg"], p["wu"], p["wd"])
+    if cfg.mlp_type == "relu2":
+        return M.relu2_mlp(x, p["wu"], p["wd"])
+    return M.gelu_mlp(x, p["wu"], p["wd"])
+
+
+def attn_block_apply(
+    cfg: ModelConfig, bp: dict, x: jax.Array, positions,
+    *, cache: Optional[dict] = None, cache_len=None,
+):
+    """One attention block. Returns (x, kv_for_cache, aux_loss)."""
+    x = _pin_residual(x)
+    h = M.apply_norm(cfg.norm, x, bp.get("ln1"))
+    if cache is None:
+        a, kv = attn_full(cfg, bp["attn"], h, positions)
+    else:
+        a, kv = attn_decode(
+            cfg, bp["attn"], h, cache["k"], cache["v"], cache_len
+        )
+    x = x + a
+    h2 = M.apply_norm(cfg.norm, x, bp.get("ln2"))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe:
+        # groups = batch rows: dispatch stays local per data shard
+        m, aux = moe_ffn(h2, bp["moe"], cfg)
+        if cfg.moe.n_shared:
+            m = m + _mlp_apply(cfg, bp["mlp"], h2)
+    else:
+        m = _mlp_apply(cfg, bp["mlp"], h2)
+    return x + m, kv, aux
+
+
+def mamba_block_apply(
+    cfg: ModelConfig, bp: dict, x: jax.Array,
+    *, cache: Optional[dict] = None,
+):
+    x = _pin_residual(x)
+    h = M.apply_norm(cfg.norm, x, bp.get("ln1"))
+    out, new_cache = mamba_block(cfg, h, bp["mamba"], cache=cache)
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, tokens, frontend_embeds):
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if frontend_embeds is not None:
+        x = jnp.concatenate(
+            [frontend_embeds.astype(cfg.dtype), x], axis=1
+        )
+    return x
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    x = M.apply_norm(cfg.norm, x, params.get("final_norm"))
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    return (x @ head).astype(jnp.float32)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Any,
+    tokens: jax.Array,
+    *,
+    frontend_embeds: Optional[jax.Array] = None,
+    cache: Optional[Cache] = None,
+    return_cache: bool = False,
+    last_only: bool = False,
+):
+    """Returns (logits, new_cache_or_None, moe_aux_loss).
+
+    cache=None             -> train / prefill over the full sequence
+    cache + tokens (B,1)   -> single-token decode
+    last_only=True         -> unembed only the final position (prefill:
+                              avoids materializing (B,S,V) logits)
+    """
+    x = _pin_residual(_embed(cfg, params, tokens, frontend_embeds))
+    B, S, _ = x.shape
+    decode = cache is not None and S == 1
+    if decode:
+        cache_len = cache["len"]
+        positions = None  # decode blocks derive positions from cache_len
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if cfg.family == "ssm":
+        x, new_cache = _forward_ssm(cfg, params, x, cache, decode)
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        x, new_cache, aux = _forward_hybrid(
+            cfg, params, x, positions, cache, decode
+        )
+    else:
+        x, new_cache, aux = _forward_attn(
+            cfg, params, x, positions, cache, decode, return_cache
+        )
+
+    if last_only:
+        x = x[:, -1:, :]
+    logits = _unembed(cfg, params, x)
+    if new_cache is not None:
+        new_cache["len"] = (cache["len"] if decode else 0) + (
+            1 if decode else S
+        )
+    if not (return_cache or decode):
+        new_cache = None
+    return logits, new_cache, aux
+
+
+def _forward_attn(cfg, params, x, positions, cache, decode, return_cache):
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if decode:
+        cache_len = cache["len"]
+
+        def body(carry, xs):
+            h, aux = carry
+            bp, ck, cv = xs
+            h, (nk, nv), a = attn_block_apply(
+                cfg, bp, h, None,
+                cache={"k": ck, "v": cv}, cache_len=cache_len,
+            )
+            return (h, aux + a), (nk, nv)
+
+        (x, aux), (ks, vs) = jax.lax.scan(
+            body, (x, aux0), (params["blocks"], cache["k"], cache["v"])
+        )
+        return x, {"k": ks, "v": vs}, aux
+
+    def body(carry, bp):
+        h, aux = carry
+        h, kv, a = attn_block_apply(cfg, bp, h, positions)
+        return (h, aux + a), kv if return_cache else None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), kvs = jax.lax.scan(body, (x, aux0), params["blocks"])
+    new_cache = (
+        {"k": kvs[0], "v": kvs[1]} if return_cache else None
+    )
+    return x, new_cache, aux
+
+
+_SSM_CACHE_KEYS = ("conv_x", "conv_bc", "ssd")
+
+
+def _forward_ssm(cfg, params, x, cache, decode):
+    if decode:
+        def body(h, xs):
+            bp, ck = xs
+            h, nc = mamba_block_apply(cfg, bp, h, cache=ck)
+            return h, nc
+
+        x, ncache = jax.lax.scan(
+            body, x,
+            (params["blocks"], {k: cache[k] for k in _SSM_CACHE_KEYS}),
+        )
+        return x, ncache
+
+    def body(h, bp):
+        h, nc = mamba_block_apply(cfg, bp, h)
+        return h, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, ncache = jax.lax.scan(body, x, params["blocks"])
+    return x, ncache
+
+
+def _hybrid_split(cfg: ModelConfig):
+    k = cfg.hybrid.attn_every
+    n_seg = cfg.n_layers // k
+    tail = cfg.n_layers - n_seg * k
+    return k, n_seg, tail
+
+
+def _forward_hybrid(cfg, params, x, positions, cache, decode):
+    """Mamba backbone; the weight-shared attention block runs after each
+    k-layer segment (its KV cache is stacked over segments)."""
+    k, n_seg, tail = _hybrid_split(cfg)
+    blocks = params["blocks"]
+    seg_blocks = jax.tree.map(
+        lambda a: a[: n_seg * k].reshape((n_seg, k) + a.shape[1:]), blocks
+    )
+    tail_blocks = jax.tree.map(lambda a: a[n_seg * k :], blocks)
+    shared = params["shared"]
+    aux0 = jnp.zeros((), jnp.float32)
+    cache_len = cache["len"] if decode else None
+
+    def mamba_scan(h, bs, caches):
+        if decode:
+            def inner(hh, xs):
+                bp, ck = xs
+                hh, nc = mamba_block_apply(cfg, bp, hh, cache=ck)
+                return hh, nc
+
+            return jax.lax.scan(inner, h, (bs, caches))
+
+        def inner(hh, bp):
+            hh, nc = mamba_block_apply(cfg, bp, hh)
+            return hh, nc
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return jax.lax.scan(inner, h, bs)
+
+    def _seg_cache(full):
+        return jax.tree.map(
+            lambda a: a[: n_seg * k].reshape((n_seg, k) + a.shape[1:]),
+            full,
+        )
+
+    def seg_body(carry, xs):
+        h, aux = carry
+        if decode:
+            bs, mck, ck, cv = xs
+            h, nmc = mamba_scan(h, bs, mck)
+            h, (nk, nv), a = attn_block_apply(
+                cfg, shared, h, None,
+                cache={"k": ck, "v": cv}, cache_len=cache_len,
+            )
+            return (h, aux + a), (nmc, nk, nv)
+        bs = xs
+        h, nmc = mamba_scan(h, bs, None)
+        h, (kk, vv), a = attn_block_apply(cfg, shared, h, positions)
+        return (h, aux + a), (nmc, kk, vv)
+
+    mck_full = (
+        {kk: cache[kk] for kk in _SSM_CACHE_KEYS} if decode else None
+    )
+    if decode:
+        (x, aux), (nmc, nk, nv) = jax.lax.scan(
+            seg_body, (x, aux0),
+            (seg_blocks, _seg_cache(mck_full), cache["k"], cache["v"]),
+        )
+    else:
+        (x, aux), (nmc, nk, nv) = jax.lax.scan(
+            seg_body, (x, aux0), seg_blocks
+        )
+    nmc = jax.tree.map(
+        lambda a: a.reshape((n_seg * k,) + a.shape[2:]), nmc
+    )
+
+    # tail mamba layers (no shared block after)
+    if tail:
+        tcache = (
+            jax.tree.map(lambda a: a[n_seg * k :], mck_full)
+            if decode else None
+        )
+        x, tmc = mamba_scan(x, tail_blocks, tcache)
+        nmc = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), nmc, tmc
+        )
+
+    new_cache = dict(nmc)
+    new_cache["k"], new_cache["v"] = nk, nv
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def _cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    out: dict = {}
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        out["conv_x"] = (
+            (cfg.n_layers, batch, s.conv_kernel, cfg.d_inner), dt
+        )
+        out["conv_bc"] = (
+            (cfg.n_layers, batch, s.conv_kernel,
+             2 * s.n_groups * s.d_state), dt
+        )
+        out["ssd"] = (
+            (cfg.n_layers, batch, cfg.ssm_heads, s.head_dim, s.d_state),
+            jnp.float32,
+        )
+    if cfg.family == "hybrid":
+        _, n_seg, _ = _hybrid_split(cfg)
+        out["k"] = (
+            (n_seg, batch, max_len, cfg.n_kv_heads, cfg.hd), dt
+        )
+        out["v"] = out["k"]
+    elif cfg.family != "ssm":
+        out["k"] = (
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dt
+        )
+        out["v"] = out["k"]
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    sh = _cache_shapes(cfg, batch, max_len)
+    c = {k: jnp.zeros(s, d) for k, (s, d) in sh.items()}
+    c["len"] = jnp.zeros((), jnp.int32)
+    return c
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    sh = _cache_shapes(cfg, batch, max_len)
+    c = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in sh.items()}
+    c["len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return c

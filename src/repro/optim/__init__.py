@@ -1,0 +1,21 @@
+"""Optimizers (from scratch — no optax in this environment), schedules,
+ZeRO-1 state sharding, and gradient compression."""
+
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    sgd,
+    lion,
+    Optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import (
+    cosine_schedule,
+    linear_warmup_cosine,
+    constant_schedule,
+)
+from repro.optim.compression import (
+    compress_bf16,
+    decompress_bf16,
+    Int8ErrorFeedback,
+)

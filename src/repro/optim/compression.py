@@ -1,0 +1,64 @@
+"""Gradient compression for cross-pod all-reduce.
+
+Two schemes used by the distributed train step:
+
+* **bf16 all-reduce** — cast grads to bfloat16 before the cross-pod
+  all-reduce, halving inter-pod ICI bytes at negligible quality cost
+  (the standard MaxText-style trick). Pure functions so they compose
+  inside pjit.
+* **int8 + error feedback** — quantize to int8 with a per-tensor scale
+  and carry the quantization error into the next step (1-bit-Adam-style
+  error feedback, adapted). 4x byte reduction on the wire.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+class Int8ErrorFeedback(NamedTuple):
+    """Carries per-leaf residual error between steps."""
+
+    residual: Any
+
+    @staticmethod
+    def init(grads) -> "Int8ErrorFeedback":
+        return Int8ErrorFeedback(
+            jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+        )
+
+    def compress(self, grads):
+        """Return (int8 payload, scales, new_state). Payload is what goes
+        over the wire (all-reduced in int32 accumulate then rescaled)."""
+
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            err = g - q.astype(jnp.float32) * scale
+            return q, scale, err
+
+        flat, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(self.residual)
+        out = [one(g, r) for g, r in zip(flat, flat_r)]
+        payload = tdef.unflatten([o[0] for o in out])
+        scales = tdef.unflatten([o[1] for o in out])
+        new_state = Int8ErrorFeedback(tdef.unflatten([o[2] for o in out]))
+        return payload, scales, new_state
+
+    @staticmethod
+    def decompress(payload, scales):
+        return jax.tree.map(
+            lambda q, s: q.astype(jnp.float32) * s, payload, scales
+        )

@@ -1,0 +1,172 @@
+"""Minimal, pytree-generic optimizers with an optax-like
+(init, update) interface.
+
+Each optimizer is a factory returning an :class:`Optimizer` of pure
+functions, so states are plain pytrees that shard/checkpoint like any
+other array tree (ZeRO-1 sharding is applied by the caller via
+PartitionSpecs on these trees — see ``repro.parallel.sharding``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any  # optimizer-specific pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def _tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), tree
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW. ``state_dtype`` lets callers halve optimizer memory
+    (bf16 m/v) — a distributed-memory trick surfaced as a config knob."""
+
+    def sched(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={
+                "m": _tree_zeros_like(params, state_dtype),
+                "v": _tree_zeros_like(params, state_dtype),
+            },
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * delta
+            return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.inner["m"])
+        flat_v = tdef.flatten_up_to(state.inner["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, inner={"m": new_m, "v": new_v})
+
+    return Optimizer(init, update)
+
+
+def sgd(
+    lr: float | Callable[[jax.Array], jax.Array],
+    *,
+    momentum: float = 0.0,
+    nesterov: bool = False,
+) -> Optimizer:
+    def sched(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr)
+
+    def init(params):
+        inner = _tree_zeros_like(params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda b, g: momentum * b + g, state.inner, grads
+            )
+            eff = (
+                jax.tree.map(lambda g, b: g + momentum * b, grads, new_mom)
+                if nesterov
+                else new_mom
+            )
+        else:
+            new_mom, eff = None, grads
+        new_p = jax.tree.map(lambda p, g: p - lr_t * g, params, eff)
+        return new_p, OptState(step=step, inner=new_mom)
+
+    return Optimizer(init, update)
+
+
+def lion(
+    lr: float | Callable[[jax.Array], jax.Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.99,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Lion — sign-based update; optimizer state is a single momentum
+    tree (half of Adam's), relevant for the memory roofline at scale."""
+
+    def sched(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32), inner=_tree_zeros_like(params)
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(g, m, p):
+            c = b1 * m + (1 - b1) * g
+            newp = p - lr_t * (jnp.sign(c) + weight_decay * p)
+            newm = b2 * m + (1 - b2) * g
+            return newp.astype(p.dtype), newm
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.inner)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            tdef.unflatten([o[0] for o in out]),
+            OptState(step=step, inner=tdef.unflatten([o[1] for o in out])),
+        )
+
+    return Optimizer(init, update)

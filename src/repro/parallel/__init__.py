@@ -1,0 +1,10 @@
+"""Distribution: mesh-axis conventions, sharding plans, schemes."""
+
+from repro.parallel.sharding import (
+    ShardScheme,
+    default_scheme,
+    make_param_shardings,
+    make_batch_shardings,
+    make_cache_shardings,
+    make_opt_shardings,
+)

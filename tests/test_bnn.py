@@ -1,0 +1,115 @@
+"""BNN substrate: fp-sim vs packed-integer equivalence for both paper
+models, BN threshold folding property, training convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.bnn import build_model
+from repro.bnn import layers as L
+from repro.bnn.fold_bn import fold_bn
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.bnn.train import init_train_state, train_step, eval_step
+from repro.data import make_image_dataset, ShardedBatcher
+
+
+@pytest.mark.parametrize("name,scale", [
+    ("fashion_mnist", 0.5), ("cifar10", 0.25),
+])
+def test_fp_vs_packed_exact(name, scale):
+    m = build_model(name, scale=scale)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    # randomize BN state so folding is non-trivial
+    for spec, p in zip(m.specs, params):
+        if spec.kind == "step":
+            key, k1, k2, k3, k4 = jax.random.split(key, 5)
+            p["gamma"] = jax.random.normal(k1, p["gamma"].shape)  # +/- mix
+            p["beta"] = jax.random.normal(k2, p["beta"].shape)
+            p["mean"] = jax.random.normal(k3, p["mean"].shape) * 5
+            p["var"] = jax.random.uniform(k4, p["var"].shape, minval=0.1)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, *m.input_hw, m.in_channels))
+    logits_fp, _ = m.apply_fp(params, x, train=False)
+    scores = forward_packed(m.specs, pack_params(m.specs, params),
+                            prepare_input_packed(x))
+    assert np.array_equal(
+        np.asarray(scores), np.asarray(logits_fp).astype(np.int64)
+    )
+
+
+def test_paper_model_structure():
+    fm = build_model("fashion_mnist")
+    cf = build_model("cifar10")
+    assert len(fm.specs) == 10           # paper: 10 layers
+    assert len(cf.specs) == 19           # paper: 19 layers
+    # paper's stated positions (1-based): conv at 1,4 (FMNIST)
+    assert [s.kind for s in fm.specs[:2]] == ["conv", "mp"]
+    assert fm.specs[3].kind == "conv"
+    # CIFAR conv positions 1,3,6,8,11,13
+    conv_idx = [s.idx for s in cf.specs if s.kind == "conv"]
+    assert conv_idx == [1, 3, 6, 8, 11, 13]
+    mp_idx = [s.idx for s in cf.specs if s.kind == "mp"]
+    assert mp_idx == [4, 9, 14]
+    # output head is 10 classes
+    assert fm.specs[-1].out_shape == (10,)
+    assert cf.specs[-1].out_shape == (10,)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    gamma_sign=st.sampled_from([-1.0, 0.0, 1.0]),
+)
+def test_fold_bn_matches_fp(seed, gamma_sign):
+    """Property: integer threshold compare == sign(BN(y)) for integer y."""
+    rng = np.random.default_rng(seed)
+    c = 8
+    gamma = rng.normal(size=c) * (gamma_sign if gamma_sign else 0.0)
+    if gamma_sign == 0.0:
+        gamma = np.zeros(c)
+    beta = rng.normal(size=c) * 3
+    mean = rng.normal(size=c) * 10
+    var = rng.uniform(0.05, 4.0, size=c)
+    t, flip = fold_bn(gamma, beta, mean, var)
+    y = rng.integers(-500, 500, size=(64, c))
+    bn = gamma * (y - mean) / np.sqrt(var + L.BN_EPS) + beta
+    want = bn >= 0
+    got = (y > t) ^ flip
+    assert np.array_equal(want, got)
+
+
+def test_training_learns():
+    m = build_model("fashion_mnist", scale=0.25)
+    ds = make_image_dataset(0, 512, (28, 28), 1)
+    state, opt = init_train_state(m, jax.random.PRNGKey(0), lr=2e-3)
+    bt = ShardedBatcher(n=512, global_batch=64, seed=0)
+    for step in range(40):
+        x, y = bt.batch((ds.x, ds.y), step)
+        state, metrics = train_step(m, opt, state, x, y)
+        assert np.isfinite(float(metrics["loss"]))
+    xe, ye = bt.batch((ds.x, ds.y), 10_001)
+    acc = float(eval_step(m, state.params, xe, ye))
+    assert acc > 0.5, f"BNN failed to learn (acc={acc})"
+
+
+def test_trained_model_packs_and_agrees():
+    """Train a few steps, quantize, verify packed inference == fp eval."""
+    m = build_model("fashion_mnist", scale=0.25)
+    ds = make_image_dataset(1, 256, (28, 28), 1)
+    state, opt = init_train_state(m, jax.random.PRNGKey(2), lr=1e-3)
+    bt = ShardedBatcher(n=256, global_batch=32, seed=1)
+    for step in range(10):
+        x, y = bt.batch((ds.x, ds.y), step)
+        state, _ = train_step(m, opt, state, x, y)
+    x, _ = bt.batch((ds.x, ds.y), 99)
+    logits_fp, _ = m.apply_fp(state.params, x, train=False)
+    scores = forward_packed(
+        m.specs, pack_params(m.specs, state.params), prepare_input_packed(x)
+    )
+    assert np.array_equal(
+        np.asarray(scores), np.asarray(logits_fp).astype(np.int64)
+    )

@@ -1,0 +1,57 @@
+"""Analytic TPU cost model: structural properties the mapper relies on."""
+
+import pytest
+
+from repro.bnn import build_model
+from repro.core import cost_model as cm
+from repro.core.parallel_config import CONFIGS
+
+
+def test_grid_order_changes_traffic():
+    """The aspect choice must change modeled HBM traffic (reuse
+    distance) — otherwise the TPU-target mapping would be degenerate."""
+    dims = cm.GemmDims(b=16, p=1024, n=512, kw=72)
+    traffic = {c: cm.gemm_hbm_traffic(dims, c) for c in
+               ("X", "Y", "Z", "XY", "XZ", "YZ", "XYZ")}
+    assert len(set(traffic.values())) > 1
+    # lower bound: every operand moved at least once
+    lo = dims.a_bytes + dims.w_bytes + dims.o_bytes
+    assert all(t >= lo for t in traffic.values())
+
+
+def test_times_positive_and_cpu_differs():
+    dims = cm.GemmDims(b=4, p=64, n=64, kw=8)
+    for c in CONFIGS:
+        t = cm.gemm_time_tpu(dims, c)
+        assert t > 0
+    assert cm.gemm_time_tpu(dims, "CPU") != cm.gemm_time_tpu(dims, "XYZ")
+
+
+def test_analytic_mapper_keeps_small_layers_on_host():
+    """On the analytic v5e model, tiny layers must stay on CPU (the
+    transfer+dispatch overhead dominates) while big conv layers go to
+    a parallel config — the paper's core qualitative claim."""
+    m = build_model("cifar10", scale=0.5)
+    small = [s for s in m.specs if s.kind in ("mp", "step", "flat")]
+    big = [s for s in m.specs if s.kind == "conv"][2:]  # later convs
+    for s in small:
+        t_cpu = cm.layer_time_tpu(s, "CPU", batch=16)
+        t_gpu = cm.layer_time_tpu(s, "XYZ", batch=16)
+        assert t_cpu < t_gpu, f"{s.notation}: cpu {t_cpu} gpu {t_gpu}"
+    assert any(
+        cm.layer_time_tpu(s, "XYZ", batch=128)
+        < cm.layer_time_tpu(s, "CPU", batch=128)
+        for s in big
+    ), "no large conv benefits from the accelerator in the model"
+
+
+def test_gemm_dims_for_conv_and_fc():
+    m = build_model("fashion_mnist")
+    conv = next(s for s in m.specs if s.kind == "conv")
+    fc = next(s for s in m.specs if s.kind == "fc")
+    dc = cm.gemm_dims_for(conv, batch=8)
+    assert dc.p == 28 * 28 and dc.b == 8
+    df = cm.gemm_dims_for(fc, batch=8)
+    assert df.p == 1 and df.n == fc.units
+    mp = next(s for s in m.specs if s.kind == "mp")
+    assert cm.gemm_dims_for(mp, 8) is None

@@ -1,0 +1,124 @@
+"""HEP mapper (Algorithm 1) properties + end-to-end mapping pipeline."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.mapper import (
+    EfficientConfiguration,
+    best_uniform,
+    map_efficient_configuration,
+    uniform_total,
+)
+from repro.core.mapped_model import build_mapped_model
+from repro.core.parallel_config import CONFIGS
+from repro.core.profiler import ProfileTable, profile_bnn_model
+
+
+def _random_table(rng, n_layers=5, batches=(1, 2, 4)):
+    times = {
+        b: [
+            {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            for _ in range(n_layers)
+        ]
+        for b in batches
+    }
+    return ProfileTable(
+        "synthetic", tuple(batches),
+        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mapped_dominates_every_uniform(seed):
+    """Alg.1 invariant: the efficient configuration's total is <= every
+    uniform config's total at every batch size."""
+    table = _random_table(np.random.default_rng(seed))
+    ec = map_efficient_configuration(table)
+    for cfg in CONFIGS:
+        for b in table.batch_sizes:
+            assert ec.expected_time_per_example <= uniform_total(
+                table, cfg, b
+            ) + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mapper_picks_per_layer_argmin(seed):
+    table = _random_table(np.random.default_rng(seed))
+    ec = map_efficient_configuration(table)
+    b = ec.proper_batch_size
+    for i, cfg in enumerate(ec.layer_configs):
+        row = table.times[b][i]
+        assert row[cfg] == min(row.values())
+    # and the proper batch minimizes the summed minima
+    def summin(bb):
+        return sum(min(r.values()) for r in table.times[bb])
+    assert summin(b) == min(summin(bb) for bb in table.batch_sizes)
+
+
+def test_mapper_deterministic_and_json_roundtrip():
+    table = _random_table(np.random.default_rng(0))
+    e1 = map_efficient_configuration(table)
+    e2 = map_efficient_configuration(table)
+    assert e1 == e2
+    back = EfficientConfiguration.from_json(e1.to_json())
+    assert back == e1
+
+
+@pytest.fixture(scope="module")
+def small_profiled():
+    m = build_model("fashion_mnist", scale=0.25)
+    params = m.init(jax.random.PRNGKey(0))
+    packed = pack_params(m.specs, params)
+    table = profile_bnn_model(
+        m, packed, batch_sizes=(1, 4), repeats=1
+    )
+    return m, packed, table
+
+
+def test_profile_shape(small_profiled):
+    m, _, table = small_profiled
+    assert set(table.times.keys()) == {1, 4}
+    assert len(table.times[1]) == len(m.specs)
+    for row in table.times[1]:
+        assert set(row) == set(CONFIGS)
+        assert all(t > 0 for t in row.values())
+
+
+def test_mapped_model_exact_and_dominates(small_profiled):
+    m, packed, table = small_profiled
+    ec = map_efficient_configuration(table)
+    x = jax.random.uniform(
+        jax.random.PRNGKey(1), (ec.proper_batch_size, 28, 28, 1)
+    )
+    xw = prepare_input_packed(x)
+    ref = forward_packed(m.specs, packed, xw)
+    fused = build_mapped_model(m, packed, ec, fused=True)
+    faithful = build_mapped_model(m, packed, ec, fused=False)
+    assert np.array_equal(np.asarray(fused(xw)), np.asarray(ref))
+    assert np.array_equal(faithful(xw), np.asarray(ref))
+    # paper's headline comparison: HEP config beats full-XYZ
+    _, t_xyz = best_uniform(table, "XYZ")
+    assert ec.expected_time_per_example <= t_xyz + 1e-12
+
+
+def test_analytic_source_runs():
+    m = build_model("fashion_mnist", scale=0.25)
+    params = m.init(jax.random.PRNGKey(0))
+    packed = pack_params(m.specs, params)
+    table = profile_bnn_model(
+        m, packed, batch_sizes=(1, 16), time_source="analytic"
+    )
+    ec = map_efficient_configuration(table)
+    assert ec.proper_batch_size in (1, 16)
+    # the analytic TPU model should keep tiny layers on the host
+    kinds = {l.split(":")[1][:2] for l, c in zip(
+        ec.layer_labels, ec.layer_configs) if c == "CPU"}
+    assert kinds, "analytic model mapped nothing to CPU"

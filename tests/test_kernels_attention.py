@@ -1,0 +1,92 @@
+"""Flash attention kernel vs naive oracle: shape/dtype/block sweeps,
+GQA groups, causal + full, prefill + single-token decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import flash_attention
+from repro.kernels.ref import attention_ref
+
+
+def _qkv(key, b, h, hkv, sq, sk, d, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, sq, d)).astype(dtype)
+    k = jax.random.normal(kk, (b, hkv, sk, d)).astype(dtype)
+    v = jax.random.normal(kv, (b, hkv, sk, d)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [
+    (1, 1, 1, 128, 32),
+    (2, 4, 2, 256, 64),
+    (1, 8, 1, 128, 128),   # MQA
+    (2, 6, 6, 64, 64),     # MHA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill(b, h, hkv, s, d, causal):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, h, hkv, s, s, d, jnp.float32)
+    want = attention_ref(q, k, v, causal=causal)
+    got = flash_attention(
+        q, k, v, causal=causal, backend="pallas", interpret=True,
+        q_blk=64, k_blk=64,
+    )
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(got), atol=2e-5, rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("q_blk,k_blk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_block_sweep(q_blk, k_blk):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 4, 2, 256, 256, 64, jnp.float32)
+    want = attention_ref(q, k, v, causal=True)
+    got = flash_attention(
+        q, k, v, causal=True, backend="pallas", interpret=True,
+        q_blk=q_blk, k_blk=k_blk,
+    )
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(got), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_flash_decode_single_query():
+    """Sq=1 against a long KV history — the serve_step shape."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 4, 2, 1, 512, 64, jnp.float32)
+    want = attention_ref(q, k, v, causal=True)
+    got = flash_attention(
+        q, k, v, causal=True, backend="pallas", interpret=True,
+        q_blk=1, k_blk=128,
+    )
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(got), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 1, 128, 128, 64, jnp.bfloat16)
+    want = attention_ref(q, k, v, causal=True)  # computed in f32
+    got = flash_attention(
+        q, k, v, causal=True, backend="pallas", interpret=True,
+        q_blk=64, k_blk=64,
+    )
+    np.testing.assert_allclose(
+        np.asarray(want).astype(np.float32),
+        np.asarray(got).astype(np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+
+
+def test_flash_numerical_stability_large_logits():
+    """Blockwise softmax must not overflow with large score magnitudes."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 1, 1, 128, 128, 32, jnp.float32)
+    q = q * 30.0
+    want = attention_ref(q, k, v, causal=True)
+    got = flash_attention(
+        q, k, v, causal=True, backend="pallas", interpret=True,
+        q_blk=32, k_blk=32,
+    )
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(
+        np.asarray(want), np.asarray(got), atol=5e-5, rtol=5e-5
+    )

@@ -1,0 +1,138 @@
+"""Property tests on LM-substrate invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.mamba2 import causal_conv1d, ssd_chunked
+from repro.models.modules import (
+    chunked_attention, chunked_attention_kv_parallel, rope,
+)
+from repro.models.moe import capacity, route
+from repro.models.transformer import forward, init_params
+
+
+def _tiny_dense(vocab=97):
+    return ModelConfig(
+        name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=vocab, dtype="float32", remat=False,
+    )
+
+
+def test_causality_future_tokens_do_not_affect_past_logits():
+    cfg = _tiny_dense()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    l1, _, _ = forward(cfg, params, toks)
+    toks2 = toks.at[:, 8:].set((toks[:, 8:] + 1) % cfg.vocab)
+    l2, _, _ = forward(cfg, params, toks2)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :8]), np.asarray(l2[:, :8]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(l1[:, 8:]), np.asarray(l2[:, 8:]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunk=st.sampled_from([2, 4, 8, 16]))
+def test_ssd_chunk_size_invariance(chunk):
+    """The chunked SSD must compute the same function for any chunk."""
+    key = jax.random.PRNGKey(3)
+    B, S, H, P, N = 2, 16, 3, 4, 8
+    x = jax.random.normal(key, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 1, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, 1, N))
+    y_ref, h_ref = ssd_chunked(x, dt, A, Bm, Cm, chunk=S)  # one chunk
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_causal_conv_matches_explicit():
+    key = jax.random.PRNGKey(5)
+    B, S, C, K = 2, 10, 3, 4
+    x = jax.random.normal(key, (B, S, C))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, C))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (C,))
+    y = causal_conv1d(x, w, b)
+    # explicit: y[t] = b + sum_i w[i] * x[t-K+1+i]
+    for t in (0, 3, 9):
+        want = b.copy()
+        for i in range(K):
+            src = t - (K - 1 - i)
+            if src >= 0:
+                want = want + w[i] * x[0, src]
+        np.testing.assert_allclose(np.asarray(y[0, t]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 4),
+)
+def test_route_gates_normalized_and_topk(seed, k):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (16, 8))
+    gates, ids = route(logits, k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)),
+                               np.ones(16), rtol=1e-5)
+    assert np.asarray(gates).min() >= 0
+    # ids are the true top-k of softmax(logits) == top-k of logits
+    want = np.argsort(-np.asarray(logits), axis=-1)[:, :k]
+    assert np.array_equal(np.sort(np.asarray(ids), -1), np.sort(want, -1))
+
+
+def test_capacity_scales_with_tokens():
+    from repro.models.config import MoEConfig
+    cfg = ModelConfig(
+        name="m", family="moe", n_layers=1, d_model=8, n_heads=1,
+        n_kv_heads=1, d_ff=8, vocab=16,
+        moe=MoEConfig(n_experts=8, top_k=2),
+    )
+    assert capacity(cfg, 1024) > capacity(cfg, 64)
+    assert capacity(cfg, 64) >= 4
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (1, 6, 2, 16))
+    pos = jnp.arange(6)[None, :]
+    y = rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # dot(q_i, k_j) depends only on i-j: shift positions by 7
+    q, k = x[:, :3], x[:, 3:]
+    d1 = jnp.einsum(
+        "bshd,bthd->bhst", rope(q, pos[:, :3], 1e4), rope(k, pos[:, :3] + 2, 1e4)
+    )
+    d2 = jnp.einsum(
+        "bshd,bthd->bhst",
+        rope(q, pos[:, :3] + 7, 1e4), rope(k, pos[:, :3] + 9, 1e4),
+    )
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_parts", [2, 4, 8])
+def test_kv_parallel_attention_matches_chunked(n_parts):
+    key = jax.random.PRNGKey(11)
+    B, S, H, Hkv, D = 2, 64, 6, 2, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    a = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    b = chunked_attention_kv_parallel(
+        q, k, v, causal=True, q_chunk=16, n_kv_parts=n_parts
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,216 @@
+"""Substrate tests: optimizers, schedules, compression, checkpointing,
+failure recovery, deterministic data resume."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import (
+    CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
+)
+from repro.data import ShardedBatcher, make_image_dataset, make_token_stream
+from repro.optim import (
+    Int8ErrorFeedback, adamw, clip_by_global_norm, compress_bf16,
+    cosine_schedule, decompress_bf16, linear_warmup_cosine, lion, sgd,
+)
+from repro.runtime.loop import InjectedFailure, LoopConfig, TrainLoop
+
+
+# --------------------------- optimizers -----------------------------------
+
+
+def _quadratic_problem():
+    target = jnp.asarray([1.5, -2.0, 0.5])
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return {"w": jnp.zeros(3)}, loss, target
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: adamw(0.1),
+    lambda: sgd(0.1, momentum=0.9),
+    lambda: sgd(0.1, momentum=0.9, nesterov=True),
+    lambda: lion(0.02),
+])
+def test_optimizers_converge(maker):
+    params, loss, target = _quadratic_problem()
+    opt = maker()
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=0.05)
+
+
+def test_adamw_state_dtype_bf16():
+    opt = adamw(0.1, state_dtype=jnp.bfloat16)
+    params = {"w": jnp.zeros(4)}
+    st_ = opt.init(params)
+    assert st_.inner["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4)}
+    p2, st2 = opt.update(g, st_, params)
+    assert st2.inner["v"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0), "b": jnp.full((2,), -10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) <= 1.0 + 1e-5
+    assert float(norm) > 1.0
+
+
+def test_schedules():
+    s1 = cosine_schedule(1.0, 100)
+    assert float(s1(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(s1(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+    s2 = linear_warmup_cosine(1.0, 10, 110)
+    assert float(s2(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(s2(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+
+
+def test_bf16_compression_roundtrip():
+    g = {"w": jnp.linspace(-3, 3, 64)}
+    back = decompress_bf16(compress_bf16(g))
+    assert back["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(back["w"]),
+                               np.asarray(g["w"]), atol=0.02)
+
+
+def test_int8_error_feedback_unbiased_over_steps():
+    """Error feedback: repeated compression of a constant gradient must
+    converge to the true value on average."""
+    g = {"w": jnp.asarray([0.3, -0.7, 1.1, 0.01])}
+    ef = Int8ErrorFeedback.init(g)
+    acc = jnp.zeros(4)
+    n = 200
+    for _ in range(n):
+        payload, scales, ef = ef.compress(g)
+        acc = acc + Int8ErrorFeedback.decompress(payload, scales)["w"]
+    np.testing.assert_allclose(
+        np.asarray(acc / n), np.asarray(g["w"]), atol=1e-2
+    )
+
+
+# --------------------------- checkpointing --------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.int32)},
+    }
+    save_checkpoint(tmp_path, 7, tree)
+    assert latest_step(tmp_path) == 7
+    back = restore_checkpoint(tmp_path, 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": jnp.ones((4,))}
+    p = save_checkpoint(tmp_path, 1, tree)
+    # corrupt the array file
+    arrs = dict(np.load(p / "arrays.npz"))
+    arrs["a0"] = arrs["a0"] + 1
+    np.savez(p / "arrays.npz", **arrs)
+    with pytest.raises(ValueError, match="checksum"):
+        restore_checkpoint(tmp_path, 1, tree)
+
+
+def test_checkpoint_keep_n_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, save_every=1, keep=2)
+    tree = {"a": jnp.zeros(2)}
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, tree)
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in tmp_path.iterdir()
+    )
+    assert steps == [4, 5]
+
+
+def test_checkpoint_tmp_never_visible(tmp_path):
+    save_checkpoint(tmp_path, 3, {"a": jnp.zeros(3)})
+    assert not list(tmp_path.glob("*.tmp-*"))
+
+
+# --------------------------- failure recovery -----------------------------
+
+
+def _toy_loop(tmp_path, inject_at=None, total=12):
+    opt = adamw(0.05)
+    target = jnp.asarray([2.0, -1.0])
+
+    def step_fn(state, batch):
+        params, ost = state
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2) + 0.0 * jnp.sum(batch)
+
+        g = jax.grad(loss)(params)
+        params, ost = opt.update(g, ost, params)
+        return (params, ost), {"loss": loss(params)}
+
+    params = {"w": jnp.zeros(2)}
+    state = (params, opt.init(params))
+    cfg = LoopConfig(
+        total_steps=total, ckpt_dir=str(tmp_path / "ckpt"),
+        save_every=4, inject_failure_at=inject_at,
+    )
+    return TrainLoop(step_fn, lambda s: jnp.ones(2) * s, state, cfg)
+
+
+def test_loop_recovers_identically_after_failure(tmp_path):
+    # uninterrupted run
+    ref = _toy_loop(tmp_path / "ref")
+    ref_out = ref.run()
+    ref_final = np.asarray(ref.state[0]["w"])
+
+    # interrupted at step 6 (checkpoint at 4), then relaunched
+    crash = _toy_loop(tmp_path / "crash", inject_at=6)
+    with pytest.raises(InjectedFailure):
+        crash.run()
+    resumed = _toy_loop(tmp_path / "crash")
+    out = resumed.run()
+    assert resumed.start_step in (4, 8)  # restored from a checkpoint
+    np.testing.assert_allclose(
+        np.asarray(resumed.state[0]["w"]), ref_final, atol=1e-6
+    )
+    assert out["final_step"] == ref_out["final_step"]
+
+
+# --------------------------- data pipeline --------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 2**31 - 1))
+def test_batcher_deterministic_resume(step, seed):
+    bt = ShardedBatcher(n=1000, global_batch=32, seed=seed)
+    assert np.array_equal(bt.indices(step), bt.indices(step))
+
+
+def test_batcher_shards_partition_global_batch():
+    shards = [
+        ShardedBatcher(n=100, global_batch=16, seed=1,
+                       shard_index=i, num_shards=4)
+        for i in range(4)
+    ]
+    full = ShardedBatcher(n=100, global_batch=16, seed=1)
+    got = np.concatenate([s.indices(5) for s in shards])
+    assert np.array_equal(got, full.indices(5))
+
+
+def test_token_stream_resumable_and_learnable_structure():
+    sample = make_token_stream(0, vocab=50, order=1)
+    a = sample(3, 4, 16)
+    b = sample(3, 4, 16)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    c = sample(4, 4, 16)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert int(a.max()) < 50 and int(a.min()) >= 0
