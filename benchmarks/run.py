@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   profile_layers     -> Fig. 4 (per-layer x per-implementation matrix)
-  efficient_configs  -> Tables IV/V (mappings) + Table VI (min times)
+  efficient_configs  -> Tables IV/V (mappings) + Table VI (min times),
+                        DP vs greedy vs uniform baselines side by side
   batch_sweep        -> Fig. 5 (+ Fig. 1 CPU-vs-parallel gap)
   kernel_bench       -> §II-C compute substrate micro-bench
   roofline           -> EXPERIMENTS.md §Roofline (reads results/dryrun)

@@ -14,6 +14,7 @@ import dataclasses
 import jax
 
 from repro import configs as C
+from repro.core.cost_model import HOST_LATENCY, HOST_LINK_BW
 from repro.core.hep_shard import ShardTrial, search
 from repro.launch import hlo_analysis as H
 from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_BF16, build_lowered
@@ -28,6 +29,15 @@ def main():
 
     cfg = dataclasses.replace(C.get(args.arch), n_layers=args.layers)
     mesh = jax.make_mesh((2, 4), ("data", "model"))
+    sh = C.SHAPES[args.shape]
+    # real per-step host staging: the token batch up (ids + targets,
+    # int32) and the metrics scalars down — parameters and optimizer
+    # state stay device-resident across steps and are NOT charged.
+    # The global batch reaches the devices whole under every scheme, so
+    # this term is scheme-invariant: reporting-only, it never moves the
+    # search's argmin (scheme-dependent staging would mis-price
+    # resident state, the bias the layer-level DP exists to avoid)
+    step_in_bytes = 2 * sh.batch * sh.seq * 4
 
     def evaluate(scheme):
         compiled = build_lowered(cfg, args.shape, mesh, scheme).compile()
@@ -41,6 +51,10 @@ def main():
             memory_s=H.hbm_bytes(txt) / HBM_BW,
             collective_s=H.collective_bytes(txt, 8).total_bytes / ICI_BW,
             peak_bytes=peak,
+            # host staging split the same way the layer profiler splits
+            # kernel vs boundary
+            h2d_s=HOST_LATENCY + step_in_bytes / HOST_LINK_BW,
+            d2h_s=HOST_LATENCY,
         )
 
     knobs = {  # reduced lattice for the demo
@@ -55,6 +69,7 @@ def main():
         f"  compute {best.compute_s*1e3:.2f}ms  "
         f"memory {best.memory_s*1e3:.2f}ms  "
         f"collective {best.collective_s*1e3:.2f}ms  "
+        f"transfer {best.transfer_s*1e3:.2f}ms  "
         f"peak {best.peak_bytes/2**30:.2f}GiB"
     )
 

@@ -34,19 +34,28 @@ def main():
     # 2. quantize -> packed xnor/popcount inference model
     packed = pack_params(model.specs, state.params)
 
-    # 3. HEP-BNN: profile every layer under all 8 implementations
+    # 3. HEP-BNN: profile every layer under all 8 implementations,
+    #    then map with both policies — the paper's greedy Algorithm 1
+    #    and the transfer-aware DP that prices the fused executor
     table = profile_bnn_model(
         model, packed, batch_sizes=(1, 4, 16), repeats=2
     )
-    ec = map_efficient_configuration(table)
+    ec_greedy = map_efficient_configuration(table, policy="greedy")
+    ec = map_efficient_configuration(table, policy="dp")
     print(f"proper batch size: {ec.proper_batch_size}")
-    for l, c in zip(ec.layer_labels, ec.layer_configs):
-        print(f"  {l:12s} -> {c}")
+    for l, c, k, b in zip(
+        ec.layer_labels, ec.layer_configs,
+        ec.per_layer_kernel_times, ec.per_layer_boundary_times,
+    ):
+        print(f"  {l:12s} -> {c:4s} kernel {k*1e6:7.1f}us "
+              f"boundary {b*1e6:7.1f}us")
     _, t_xyz = best_uniform(table, "XYZ")
     print(
-        f"HEP {ec.expected_time_per_example*1e6:.0f} us/img vs "
+        f"HEP-dp {ec.expected_time_per_example*1e6:.0f} us/img vs "
+        f"HEP-greedy {ec_greedy.expected_time_per_example*1e6:.0f} us/img vs "
         f"full-XYZ {t_xyz*1e6:.0f} us/img "
-        f"({t_xyz/ec.expected_time_per_example:.2f}x speedup)"
+        f"(dp is {t_xyz/ec.expected_time_per_example:.2f}x vs XYZ, "
+        f"{ec_greedy.expected_time_per_example/ec.expected_time_per_example:.2f}x vs greedy)"
     )
 
     # 4. build + run the mapped model; verify exactness

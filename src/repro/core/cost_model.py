@@ -113,8 +113,9 @@ def gemm_hbm_traffic(dims: GemmDims, config: str) -> float:
     return total
 
 
-def gemm_time_tpu(dims: GemmDims, config: str) -> float:
-    """Seconds for one xnor-GEMM dispatch on a v5e chip under `config`.
+def gemm_kernel_time_tpu(dims: GemmDims, config: str) -> float:
+    """Kernel-only seconds for one xnor-GEMM dispatch under `config` —
+    no host<->device transfer term.
 
     compute and memory terms overlap (max), parallel aspect dims spread
     over TENSOR_CORES, sequential dims serialize dispatch-free.
@@ -129,30 +130,94 @@ def gemm_time_tpu(dims: GemmDims, config: str) -> float:
     core_par = min(TENSOR_CORES, max(par, 1))
     compute = dims.vpu_ops / (VPU_INT_OPS * core_par)
     memory = gemm_hbm_traffic(dims, config) / HBM_BW
-    transfer = (
-        2 * HOST_LATENCY + (dims.a_bytes + dims.o_bytes) / HOST_LINK_BW
+    return max(compute, memory) + DISPATCH_OVERHEAD
+
+
+def gemm_transfer_times_tpu(dims: GemmDims) -> tuple:
+    """(h2d, d2h) boundary seconds: operand upload / result download."""
+    h2d = HOST_LATENCY + dims.a_bytes / HOST_LINK_BW
+    d2h = HOST_LATENCY + dims.o_bytes / HOST_LINK_BW
+    return h2d, d2h
+
+
+def _split(kernel: float, transfers: tuple, config: str) -> tuple:
+    """The single placement-charging rule: host placement (CPU) has no
+    boundary cost, device placements carry the layer's (h2d, d2h)."""
+    if config == CPU:
+        return kernel, 0.0, 0.0
+    h2d, d2h = transfers
+    return kernel, h2d, d2h
+
+
+def gemm_time_tpu(dims: GemmDims, config: str) -> float:
+    """Paper-faithful per-dispatch seconds: kernel plus the full
+    per-layer H2D+D2H boundary for device placements (§IV-A)."""
+    return sum(
+        _split(
+            gemm_kernel_time_tpu(dims, config),
+            gemm_transfer_times_tpu(dims),
+            config,
+        )
     )
-    return max(compute, memory) + DISPATCH_OVERHEAD + transfer
 
 
-def elementwise_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
-    """mp / step / flat layers: pure memory-bound."""
+def elementwise_kernel_time_tpu(
+    spec: LayerSpec, config: str, batch: int
+) -> float:
+    """mp / step / flat layers: pure memory-bound, kernel term only."""
     import numpy as np
 
     elems = batch * int(np.prod(spec.in_shape))
     bytes_ = elems * 4 * 2
     if config == CPU:
         return bytes_ / CPU_BW
-    return (
-        bytes_ / HBM_BW
-        + DISPATCH_OVERHEAD
-        + 2 * HOST_LATENCY
-        + bytes_ / HOST_LINK_BW
+    return bytes_ / HBM_BW + DISPATCH_OVERHEAD
+
+
+def elementwise_transfer_times_tpu(spec: LayerSpec, batch: int) -> tuple:
+    """(h2d, d2h) for an elementwise layer (operand in, result out)."""
+    import numpy as np
+
+    elems = batch * int(np.prod(spec.in_shape))
+    h2d = HOST_LATENCY + elems * 4 / HOST_LINK_BW
+    d2h = HOST_LATENCY + elems * 4 / HOST_LINK_BW
+    return h2d, d2h
+
+
+def elementwise_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
+    return sum(
+        _split(
+            elementwise_kernel_time_tpu(spec, config, batch),
+            elementwise_transfer_times_tpu(spec, batch),
+            config,
+        )
+    )
+
+
+def layer_time_split_tpu(
+    spec: LayerSpec, config: str, batch: int
+) -> tuple:
+    """(kernel_s, h2d_s, d2h_s) for one layer at `batch`.
+
+    The transfer terms are placement costs of the layer's operand and
+    result, independent of which aspect config runs the kernel; they are
+    charged (or elided) by the mapper, not folded into the kernel time.
+    CPU placement reports zero transfer.
+    """
+    dims = gemm_dims_for(spec, batch)
+    if dims is None:
+        return _split(
+            elementwise_kernel_time_tpu(spec, config, batch),
+            elementwise_transfer_times_tpu(spec, batch),
+            config,
+        )
+    return _split(
+        gemm_kernel_time_tpu(dims, config),
+        gemm_transfer_times_tpu(dims),
+        config,
     )
 
 
 def layer_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
-    dims = gemm_dims_for(spec, batch)
-    if dims is None:
-        return elementwise_time_tpu(spec, config, batch)
-    return gemm_time_tpu(dims, config)
+    kern, h2d, d2h = layer_time_split_tpu(spec, config, batch)
+    return kern + h2d + d2h

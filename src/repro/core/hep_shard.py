@@ -38,10 +38,24 @@ class ShardTrial:
     memory_s: float
     collective_s: float
     peak_bytes: int
+    # kernel-vs-transfer split (mirrors ProfileTable's kernel/boundary
+    # decomposition): host<->device staging charged separately from the
+    # on-device step so schedulers can elide it across co-placed steps
+    h2d_s: float = 0.0
+    d2h_s: float = 0.0
+
+    @property
+    def kernel_s(self) -> float:
+        """On-device step time: overlapped compute/memory + collective."""
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+    @property
+    def transfer_s(self) -> float:
+        return self.h2d_s + self.d2h_s
 
     @property
     def cost(self) -> float:
-        c = max(self.compute_s, self.memory_s) + self.collective_s
+        c = self.kernel_s + self.transfer_s
         if self.peak_bytes > HBM_BYTES:
             c += OOM_PENALTY * (self.peak_bytes / HBM_BYTES)
         return c
@@ -97,6 +111,10 @@ def search(
                     if log:                      # profiled failure, not
                         log(f"  {knob}={v}: {e!r}")  # a crash
                     continue
+            if not trials:                       # every value failed:
+                if log:                          # the knob is a no-op
+                    log(f"  {knob}: all values failed, skipping")
+                continue
             t = min(trials, key=lambda t: t.cost)
             if t.cost < best.cost - 1e-12:       # Alg.1 argmin
                 best = t

@@ -12,6 +12,12 @@ Two build modes:
   layer's jitted implementation separately with an explicit host
   roundtrip around every non-CPU layer, reproducing the cost structure
   the profiler measured.
+
+The faithful driver honors the mapping policy's transfer semantics:
+for a ``policy="dp"`` configuration (or with ``elide_transfers=True``)
+it keeps the activation on the device across consecutive non-CPU
+layers and only crosses the host boundary where the placement changes
+— exactly the cost model the DP mapper optimizes.
 """
 
 from __future__ import annotations
@@ -76,9 +82,17 @@ def build_mapped_model(
     config: EfficientConfiguration,
     *,
     fused: bool = True,
+    elide_transfers: bool | None = None,
 ) -> Callable:
     """Returns fn(packed_input_words) -> int32 class scores, executing
-    each layer with its mapped implementation."""
+    each layer with its mapped implementation.
+
+    ``elide_transfers`` applies to the faithful (``fused=False``)
+    driver only: ``True`` crosses the host boundary solely where
+    consecutive layers change placement, ``False`` round-trips around
+    every non-CPU layer (paper §IV-A).  ``None`` follows the mapping
+    policy — DP configurations were priced under elision.
+    """
     fns = [
         _layer_fn(spec, packed, cfg)
         for spec, packed, cfg in zip(
@@ -96,16 +110,26 @@ def build_mapped_model(
 
         return run
 
+    if elide_transfers is None:
+        elide_transfers = getattr(config, "policy", "greedy") == "dp"
+
     jitted = [jax.jit(f) for f in fns]
+    cfgs = config.layer_configs
 
     def run_faithful(x_words):
         x = np.asarray(x_words)  # input starts on host
-        for f, cfg in zip(jitted, config.layer_configs):
+        for i, (f, cfg) in enumerate(zip(jitted, cfgs)):
             xd = jnp.asarray(x)
             out = f(xd)
             jax.block_until_ready(out)
-            # non-CPU layers round-trip through the host (paper §IV-A)
-            x = np.asarray(out) if cfg != CPU else out
+            if cfg == CPU:
+                x = out
+            elif elide_transfers and i + 1 < len(cfgs) and cfgs[i + 1] != CPU:
+                # co-placed successor: stay resident on the device
+                x = out
+            else:
+                # non-CPU layers round-trip through the host (§IV-A)
+                x = np.asarray(out)
         return np.asarray(x)
 
     return run_faithful

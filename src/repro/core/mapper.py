@@ -1,10 +1,40 @@
-"""Algorithm 1 — the greedy layer-to-device mapping (paper §III-B).
+"""Layer-to-device mapping: Algorithm 1 plus a transfer-aware DP.
 
-Faithful transcription: for each batch size, for each layer, choose the
-implementation with minimum inference time (kernel + boundary); the
-batch size whose summed per-layer minima is smallest becomes the
-*proper batch size*, and the per-layer argmins at that batch size form
-the *Efficient Configuration*.
+Two selectable policies, same output type:
+
+``policy="greedy"`` — Algorithm 1 (paper §III-B), faithful
+transcription: for each batch size, for each layer, choose the
+implementation with minimum inference time (kernel + full per-layer
+boundary); the batch size whose summed per-layer minima is smallest
+becomes the *proper batch size*, and the per-layer argmins at that
+batch size form the *Efficient Configuration*.  This prices the
+paper's execution model where "data transfer between CPU and GPU takes
+place before and after every layer's execution" (§IV-A).
+
+``policy="dp"`` — transfer-aware dynamic program (Viterbi over
+layers x 8 configs, run per batch size) pricing the **fused** executor
+(``mapped_model.build_mapped_model``), which elides host<->device
+roundtrips between co-placed layers — the optimization the paper names
+as future work.  Recurrence, with ``place(c) in {host, device}``
+(``CPU`` is host, every aspect config is device)::
+
+    dp[0][c]  = kernel(0, c) + (h2d(0) if place(c) == device)
+    dp[i][c]  = kernel(i, c) + min_c' ( dp[i-1][c'] + edge(i, c', c) )
+    edge(i, c', c) = h2d(i)     if host -> device
+                   = d2h(i-1)   if device -> host
+                   = 0          if placement unchanged
+    answer    = min_c ( dp[L-1][c] + (d2h(L-1) if place(c) == device) )
+
+Node cost is the kernel time alone; boundary cost is charged only where
+the placement changes (the model starts and ends on the host).  Because
+the DP minimizes the fused cost exactly, its expected time is provably
+<= the greedy mapping's under the split cost model: the greedy
+mapping is one feasible DP path, and its fused cost never exceeds its
+paper cost (eliding transfers only removes non-negative terms).
+
+On a legacy ``ProfileTable`` without the kernel/boundary split, every
+boundary reads as zero and the DP degenerates to the greedy per-layer
+argmin — the two policies agree.
 """
 
 from __future__ import annotations
@@ -13,8 +43,10 @@ import dataclasses
 import json
 from typing import Sequence
 
-from repro.core.parallel_config import CONFIGS, validate
+from repro.core.parallel_config import CPU, CONFIGS, validate
 from repro.core.profiler import ProfileTable
+
+POLICIES = ("greedy", "dp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,20 +57,34 @@ class EfficientConfiguration:
     layer_configs: tuple          # config per layer, paper Tables IV/V
     expected_time_per_example: float
     per_layer_times: tuple        # seconds/example at the proper batch
+    policy: str = "greedy"        # mapping policy that produced this
+    # kernel/boundary breakdown: per_layer_times[i] ==
+    # per_layer_kernel_times[i] + per_layer_boundary_times[i]; boundary
+    # is the transfer cost *charged by the policy* (full roundtrip per
+    # non-CPU layer for greedy, placement-change edges only for dp)
+    per_layer_kernel_times: tuple = ()
+    per_layer_boundary_times: tuple = ()
 
     def to_json(self) -> str:
+        layers = []
+        for i, (l, c, t) in enumerate(
+            zip(self.layer_labels, self.layer_configs, self.per_layer_times)
+        ):
+            entry = {"layer": l, "config": c, "time_per_example": t}
+            if self.per_layer_kernel_times:
+                entry["kernel_time_per_example"] = (
+                    self.per_layer_kernel_times[i]
+                )
+                entry["boundary_time_per_example"] = (
+                    self.per_layer_boundary_times[i]
+                )
+            layers.append(entry)
         return json.dumps(
             {
                 "model": self.model_name,
                 "proper_batch_size": self.proper_batch_size,
-                "layers": [
-                    {"layer": l, "config": c, "time_per_example": t}
-                    for l, c, t in zip(
-                        self.layer_labels,
-                        self.layer_configs,
-                        self.per_layer_times,
-                    )
-                ],
+                "policy": self.policy,
+                "layers": layers,
                 "expected_time_per_example": self.expected_time_per_example,
             },
             indent=2,
@@ -46,8 +92,11 @@ class EfficientConfiguration:
 
     @staticmethod
     def from_json(s: str) -> "EfficientConfiguration":
+        """Inverse of :meth:`to_json`; tolerates legacy JSON written
+        before the policy and kernel/boundary fields existed."""
         d = json.loads(s)
         layers = d["layers"]
+        has_split = layers and "kernel_time_per_example" in layers[0]
         return EfficientConfiguration(
             model_name=d["model"],
             proper_batch_size=d["proper_batch_size"],
@@ -57,45 +106,165 @@ class EfficientConfiguration:
             per_layer_times=tuple(
                 x["time_per_example"] for x in layers
             ),
+            policy=d.get("policy", "greedy"),
+            per_layer_kernel_times=tuple(
+                x["kernel_time_per_example"] for x in layers
+            ) if has_split else (),
+            per_layer_boundary_times=tuple(
+                x["boundary_time_per_example"] for x in layers
+            ) if has_split else (),
         )
 
 
+def _greedy_for_batch(
+    table: ProfileTable, batch: int, configs: Sequence[str]
+) -> tuple:
+    """Algorithm 1 inner loop: (total, mapping)."""
+    total = 0.0                         # line 4
+    mapping = []
+    for layer_idx in range(len(table.layer_labels)):  # line 5
+        row = table.times[batch][layer_idx]
+        min_time = float("inf")         # line 6
+        chosen = None
+        for impl in configs:            # line 7
+            t = row[impl]               # lines 8-9 (profiled)
+            if t < min_time:            # line 11
+                min_time = t
+                chosen = impl           # line 13 (MAP impl to batch)
+        total += min_time               # line 16
+        mapping.append(chosen)
+    return total, mapping
+
+
+def _dp_for_batch(
+    table: ProfileTable, batch: int, configs: Sequence[str]
+) -> tuple:
+    """Viterbi over layers x configs under the fused cost model.
+
+    Returns (total, mapping); per-layer attribution is derived from the
+    mapping afterwards so kernel and edge charges stay auditable.
+    """
+    n_layers = len(table.layer_labels)
+    # dp cost of a prefix ending with layer i mapped to config c, the
+    # activation resident at place(c); back[i][c] = best predecessor
+    prev = {
+        c: table.kernel_time(batch, 0, c)
+        + (table.h2d(batch, 0) if c != CPU else 0.0)
+        for c in configs
+    }
+    back: list = [{c: None for c in configs}]
+    for i in range(1, n_layers):
+        cur, bk = {}, {}
+        d2h_prev = table.d2h(batch, i - 1)
+        h2d_here = table.h2d(batch, i)
+        for c in configs:
+            kern = table.kernel_time(batch, i, c)
+            best_cost, best_prev = float("inf"), None
+            for cp, pcost in prev.items():
+                if (cp != CPU) == (c != CPU):
+                    edge = 0.0
+                elif c != CPU:          # host -> device: upload operand
+                    edge = h2d_here
+                else:                   # device -> host: download result
+                    edge = d2h_prev
+                cost = pcost + edge + kern
+                if cost < best_cost:
+                    best_cost, best_prev = cost, cp
+            cur[c], bk[c] = best_cost, best_prev
+        prev = cur
+        back.append(bk)
+
+    # the network's output must land back on the host
+    total, last = float("inf"), None
+    for c, cost in prev.items():
+        cost += table.d2h(batch, n_layers - 1) if c != CPU else 0.0
+        if cost < total:
+            total, last = cost, c
+    mapping = [last]
+    for i in range(n_layers - 1, 0, -1):
+        mapping.append(back[i][mapping[-1]])
+    mapping.reverse()
+    return total, mapping
+
+
+def _attribute_dp_costs(
+    table: ProfileTable, batch: int, mapping: Sequence[str]
+) -> tuple:
+    """(kernel, boundary) per layer for a DP mapping: h2d charged to the
+    layer entering the device, d2h to the layer leaving it."""
+    n_layers = len(mapping)
+    kernels, boundaries = [], []
+    for i, c in enumerate(mapping):
+        kernels.append(table.kernel_time(batch, i, c))
+        b = 0.0
+        if c != CPU:
+            entered = i == 0 or mapping[i - 1] == CPU
+            left = i == n_layers - 1 or mapping[i + 1] == CPU
+            if entered:
+                b += table.h2d(batch, i)
+            if left:
+                b += table.d2h(batch, i)
+        boundaries.append(b)
+    return tuple(kernels), tuple(boundaries)
+
+
 def map_efficient_configuration(
-    table: ProfileTable, *, configs: Sequence[str] = CONFIGS
+    table: ProfileTable,
+    *,
+    configs: Sequence[str] = CONFIGS,
+    policy: str = "greedy",
 ) -> EfficientConfiguration:
-    """Algorithm 1, lines 1-27."""
+    """Map every layer to an implementation and pick the proper batch.
+
+    ``policy="greedy"`` is Algorithm 1 lines 1-27; ``policy="dp"`` is
+    the transfer-aware Viterbi (module docstring).  Both sweep all
+    profiled batch sizes and return the best.
+    """
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown mapping policy {policy!r}; expected one of {POLICIES}"
+        )
     result_time = float("inf")          # line 2
     proper_batch = None                 # line 1
     best_mapping: list = []
-    best_times: list = []
 
     for batch in table.batch_sizes:     # line 3
-        sum_min_time = 0.0              # line 4
-        mapping, mins = [], []
-        for layer_idx in range(len(table.layer_labels)):  # line 5
-            row = table.times[batch][layer_idx]
-            min_time = float("inf")     # line 6
-            chosen = None
-            for impl in configs:        # line 7
-                t = row[impl]           # lines 8-9 (profiled)
-                if t < min_time:        # line 11
-                    min_time = t
-                    chosen = impl       # line 13 (MAP impl to batch)
-            sum_min_time += min_time    # line 16
-            mapping.append(chosen)
-            mins.append(min_time)
-        if sum_min_time < result_time:  # line 18
-            result_time = sum_min_time  # line 19
+        if policy == "greedy":
+            total, mapping = _greedy_for_batch(table, batch, configs)
+        else:
+            total, mapping = _dp_for_batch(table, batch, configs)
+        if total < result_time:         # line 18
+            result_time = total         # line 19
             proper_batch = batch        # line 20
-            best_mapping, best_times = mapping, mins
+            best_mapping = mapping
+
+    proper_batch = int(proper_batch)
+    if policy == "greedy":
+        kernels = tuple(
+            table.kernel_time(proper_batch, i, c)
+            for i, c in enumerate(best_mapping)
+        )
+        boundaries = tuple(
+            table.boundary_time(proper_batch, i, c)
+            for i, c in enumerate(best_mapping)
+        )
+    else:
+        kernels, boundaries = _attribute_dp_costs(
+            table, proper_batch, best_mapping
+        )
 
     return EfficientConfiguration(     # lines 23-27
         model_name=table.model_name,
-        proper_batch_size=int(proper_batch),
+        proper_batch_size=proper_batch,
         layer_labels=table.layer_labels,
         layer_configs=tuple(validate(c) for c in best_mapping),
         expected_time_per_example=result_time,
-        per_layer_times=tuple(best_times),
+        per_layer_times=tuple(
+            k + b for k, b in zip(kernels, boundaries)
+        ),
+        policy=policy,
+        per_layer_kernel_times=kernels,
+        per_layer_boundary_times=boundaries,
     )
 
 

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_compat import compiler_params_kwargs, vmem_scratch
+
 _NEG = -1e30
 
 
@@ -91,28 +93,14 @@ def flash_attention_pallas(
     scale = float(scale if scale is not None else 1.0 / (D ** 0.5))
     nq, nk = Sq // q_blk, Sk // k_blk
 
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-
-        scratch = [
-            pltpu.VMEM((q_blk, 1), jnp.float32),
-            pltpu.VMEM((q_blk, 1), jnp.float32),
-            pltpu.VMEM((q_blk, D), jnp.float32),
-        ]
-        extra = {
-            "compiler_params": pltpu.CompilerParams(
-                dimension_semantics=(
-                    "parallel", "parallel", "parallel", "arbitrary"
-                )
-            )
-        }
-    except Exception:  # pragma: no cover
-        scratch = [
-            pl.MemorySpace.ANY((q_blk, 1), jnp.float32),  # type: ignore
-            pl.MemorySpace.ANY((q_blk, 1), jnp.float32),  # type: ignore
-            pl.MemorySpace.ANY((q_blk, D), jnp.float32),  # type: ignore
-        ]
-        extra = {}
+    scratch = [
+        vmem_scratch((q_blk, 1), jnp.float32),
+        vmem_scratch((q_blk, 1), jnp.float32),
+        vmem_scratch((q_blk, D), jnp.float32),
+    ]
+    extra = compiler_params_kwargs(
+        ("parallel", "parallel", "parallel", "arbitrary")
+    )
 
     return pl.pallas_call(
         functools.partial(

@@ -1,0 +1,75 @@
+"""Version-compat shims for the Pallas TPU extension module.
+
+The TPU compiler-params class was renamed across jax releases
+(``pltpu.TPUCompilerParams`` on jax 0.4.x, ``pltpu.CompilerParams``
+on newer releases).  Kernels that construct it directly crash on one
+side of the rename; worse, a bare ``except`` around the construction
+silently drops ``dimension_semantics`` so every aspect configuration
+compiles identically.  Both kernels (``xnor_popcount``,
+``flash_attention``) resolve the class through here instead.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover - pallas builds without TPU ext
+    pltpu = None
+
+# The compiler-params class under either of its names, or None when the
+# TPU extension is unavailable entirely.
+_COMPILER_PARAMS_CLS = (
+    getattr(pltpu, "CompilerParams", None)
+    or getattr(pltpu, "TPUCompilerParams", None)
+    if pltpu is not None
+    else None
+)
+
+
+def tpu_compiler_params(
+    dimension_semantics: Sequence[str], **kwargs: Any
+):
+    """Build TPU compiler params carrying ``dimension_semantics``.
+
+    Returns None when no compatible class exists (pure-interpreter
+    environments) — callers must then omit ``compiler_params`` from
+    ``pallas_call`` rather than pass a wrong-typed value.
+    """
+    if _COMPILER_PARAMS_CLS is None:
+        return None
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=tuple(dimension_semantics), **kwargs
+    )
+
+
+def compiler_params_kwargs(
+    dimension_semantics: Sequence[str], **kwargs: Any
+) -> dict:
+    """``**``-splattable ``{"compiler_params": ...}`` (or ``{}``)."""
+    params = tpu_compiler_params(dimension_semantics, **kwargs)
+    return {"compiler_params": params} if params is not None else {}
+
+
+def vmem_scratch(shape: tuple, dtype) -> Any:
+    """A VMEM scratch allocation, degrading to a backend-neutral
+    ``MemoryRef`` in ``MemorySpace.ANY`` for interpreter-mode
+    environments where the TPU extension (and its memory-space
+    constructors) is absent."""
+    if pltpu is not None and hasattr(pltpu, "VMEM"):
+        return pltpu.VMEM(shape, dtype)
+    try:
+        from jax._src.pallas import core as pallas_core
+
+        return pallas_core.MemoryRef(
+            tuple(shape), jnp.dtype(dtype), pallas_core.MemorySpace.ANY
+        )
+    except Exception as e:  # pragma: no cover
+        raise ImportError(
+            "no usable Pallas scratch allocator: the TPU extension is "
+            "unavailable and jax._src.pallas.core.MemoryRef could not "
+            "be constructed on this jax version"
+        ) from e

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_compat import compiler_params_kwargs
+
 ASPECTS_ALL = ("X", "Y", "Z")
 
 
@@ -95,14 +97,6 @@ def xnor_gemm_pallas(
     dim_sem = tuple(
         "parallel" if ax in aspects else "arbitrary" for ax in axis_order
     )
-    try:  # Mosaic-only params; ignored by the interpreter
-        from jax.experimental.pallas import tpu as pltpu
-
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=dim_sem
-        )
-    except Exception:  # pragma: no cover
-        compiler_params = None
 
     return pl.pallas_call(
         functools.partial(_kernel, k_true=k_true),
@@ -114,5 +108,5 @@ def xnor_gemm_pallas(
         out_specs=pl.BlockSpec((1, p_blk, n_blk), o_index),
         out_shape=jax.ShapeDtypeStruct((B, P, N), jnp.int32),
         interpret=interpret,
-        **({"compiler_params": compiler_params} if compiler_params else {}),
+        **compiler_params_kwargs(dim_sem),
     )(a, w)

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.bnn.binarize import (
     PACK_W, np_pack_bits, pack_bits, unpack_bits, packed_len

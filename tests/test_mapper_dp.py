@@ -1,0 +1,246 @@
+"""Transfer-aware DP mapper: optimality vs greedy, transfer-elision
+accounting, and the extended EfficientConfiguration JSON round-trip."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.mapper import (
+    EfficientConfiguration,
+    map_efficient_configuration,
+)
+from repro.core.parallel_config import CONFIGS, CPU
+from repro.core.profiler import ProfileTable, profile_bnn_model
+
+
+def _random_split_table(rng, n_layers=6, batches=(1, 2, 4)):
+    """A ProfileTable with independent kernel and boundary components,
+    totals assembled the way the profiler does."""
+    kernel, times, h2d, d2h = {}, {}, {}, {}
+    for b in batches:
+        kernel[b], times[b], h2d[b], d2h[b] = [], [], [], []
+        for _ in range(n_layers):
+            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            up = float(rng.uniform(1e-6, 5e-4))
+            down = float(rng.uniform(1e-6, 5e-4))
+            trow = {
+                c: krow[c] if c == CPU else krow[c] + up + down
+                for c in CONFIGS
+            }
+            kernel[b].append(krow)
+            times[b].append(trow)
+            h2d[b].append(up)
+            d2h[b].append(down)
+    return ProfileTable(
+        "synthetic", tuple(batches),
+        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
+        kernel_times=kernel, h2d_times=h2d, d2h_times=d2h,
+    )
+
+
+def _fused_cost(table, batch, mapping):
+    """Independent reference implementation of the fused cost model:
+    kernel per layer + boundary only at host<->device placement
+    changes (model starts and ends on the host)."""
+    total = 0.0
+    prev_dev = False
+    for i, c in enumerate(mapping):
+        dev = c != CPU
+        if dev and not prev_dev:
+            total += table.h2d(batch, i)
+        if prev_dev and not dev:
+            total += table.d2h(batch, i - 1)
+        total += table.kernel_time(batch, i, c)
+        prev_dev = dev
+    if prev_dev:
+        total += table.d2h(batch, len(mapping) - 1)
+    return total
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dp_no_worse_than_greedy(seed):
+    table = _random_split_table(np.random.default_rng(seed))
+    dp = map_efficient_configuration(table, policy="dp")
+    greedy = map_efficient_configuration(table, policy="greedy")
+    assert (
+        dp.expected_time_per_example
+        <= greedy.expected_time_per_example + 1e-12
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dp_total_matches_fused_cost_of_its_mapping(seed):
+    table = _random_split_table(np.random.default_rng(seed))
+    dp = map_efficient_configuration(table, policy="dp")
+    b = dp.proper_batch_size
+    assert dp.expected_time_per_example == pytest.approx(
+        _fused_cost(table, b, dp.layer_configs), rel=1e-9
+    )
+    # per-layer attribution sums back to the total
+    assert sum(dp.per_layer_times) == pytest.approx(
+        dp.expected_time_per_example, rel=1e-9
+    )
+    assert all(
+        t == pytest.approx(k + bd, rel=1e-9)
+        for t, k, bd in zip(
+            dp.per_layer_times,
+            dp.per_layer_kernel_times,
+            dp.per_layer_boundary_times,
+        )
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dp_beats_every_mapping_exhaustively(seed):
+    """On a tiny instance, Viterbi must equal brute force over all
+    2-config-per-layer paths (CPU vs one device config)."""
+    import itertools
+
+    table = _random_split_table(
+        np.random.default_rng(seed), n_layers=4, batches=(1,)
+    )
+    dp = map_efficient_configuration(
+        table, policy="dp", configs=("CPU", "XYZ")
+    )
+    brute = min(
+        _fused_cost(table, 1, m)
+        for m in itertools.product(("CPU", "XYZ"), repeat=4)
+    )
+    assert dp.expected_time_per_example == pytest.approx(brute, rel=1e-9)
+
+
+def test_elision_credited_only_across_placement_changes():
+    """Force a device-device-device sandwich: interior boundaries must
+    not be charged; entry h2d and exit d2h must."""
+    batches = (1,)
+    n = 3
+    kernel = {1: [{c: 1.0 if c == CPU else 0.1 for c in CONFIGS}
+                  for _ in range(n)]}
+    h2d = {1: [0.01, 0.02, 0.04]}
+    d2h = {1: [0.001, 0.002, 0.004]}
+    times = {1: [
+        {c: kernel[1][i][c] + (0.0 if c == CPU else h2d[1][i] + d2h[1][i])
+         for c in CONFIGS}
+        for i in range(n)
+    ]}
+    table = ProfileTable(
+        "sandwich", batches, ("L1:C1", "L2:C2", "L3:C3"), times,
+        kernel_times=kernel, h2d_times=h2d, d2h_times=d2h,
+    )
+    dp = map_efficient_configuration(table, policy="dp")
+    assert all(c != CPU for c in dp.layer_configs)
+    # 3 kernels + entry h2d of layer 0 + exit d2h of layer 2, nothing else
+    assert dp.expected_time_per_example == pytest.approx(
+        0.3 + 0.01 + 0.004, rel=1e-9
+    )
+    assert dp.per_layer_boundary_times[0] == pytest.approx(0.01)
+    assert dp.per_layer_boundary_times[1] == 0.0
+    assert dp.per_layer_boundary_times[2] == pytest.approx(0.004)
+
+
+def test_dp_on_legacy_table_equals_greedy():
+    """Without the kernel/boundary split every boundary reads as zero
+    and the DP must reproduce the greedy mapping's total."""
+    rng = np.random.default_rng(7)
+    times = {
+        b: [
+            {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            for _ in range(5)
+        ]
+        for b in (1, 2)
+    }
+    table = ProfileTable(
+        "legacy", (1, 2), tuple(f"L{i+1}:C64" for i in range(5)), times
+    )
+    dp = map_efficient_configuration(table, policy="dp")
+    greedy = map_efficient_configuration(table, policy="greedy")
+    assert dp.expected_time_per_example == pytest.approx(
+        greedy.expected_time_per_example, rel=1e-12
+    )
+    assert dp.layer_configs == greedy.layer_configs
+
+
+def test_unknown_policy_rejected():
+    table = _random_split_table(np.random.default_rng(0))
+    with pytest.raises(ValueError, match="policy"):
+        map_efficient_configuration(table, policy="simulated-annealing")
+
+
+def test_json_roundtrip_with_split_fields():
+    table = _random_split_table(np.random.default_rng(3))
+    for policy in ("greedy", "dp"):
+        ec = map_efficient_configuration(table, policy=policy)
+        back = EfficientConfiguration.from_json(ec.to_json())
+        assert back == ec
+        d = json.loads(ec.to_json())
+        assert d["policy"] == policy
+        assert all(
+            "kernel_time_per_example" in x
+            and "boundary_time_per_example" in x
+            for x in d["layers"]
+        )
+
+
+def test_json_legacy_load_without_split_fields():
+    """JSON written before the split must still load (kernel/boundary
+    default to empty, policy to greedy)."""
+    legacy = json.dumps({
+        "model": "m",
+        "proper_batch_size": 4,
+        "layers": [
+            {"layer": "L1:C64", "config": "XYZ", "time_per_example": 1e-4},
+            {"layer": "L2:FC10", "config": "CPU", "time_per_example": 2e-4},
+        ],
+        "expected_time_per_example": 3e-4,
+    })
+    ec = EfficientConfiguration.from_json(legacy)
+    assert ec.policy == "greedy"
+    assert ec.layer_configs == ("XYZ", "CPU")
+    assert ec.per_layer_kernel_times == ()
+    assert ec.per_layer_boundary_times == ()
+
+
+def test_dp_strictly_better_on_seed_model_analytic():
+    """Acceptance: strict improvement on a real seed model under the
+    analytic v5e profile — the greedy mapper over-charges device
+    placements by the full per-layer roundtrip and misses the fused
+    schedule the DP finds."""
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(
+        m, packed, batch_sizes=(1, 16, 128), time_source="analytic"
+    )
+    dp = map_efficient_configuration(table, policy="dp")
+    greedy = map_efficient_configuration(table, policy="greedy")
+    assert (
+        dp.expected_time_per_example < greedy.expected_time_per_example
+    )
+
+
+def test_measured_profile_carries_split():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(m, packed, batch_sizes=(1,), repeats=1)
+    assert table.kernel_times is not None
+    for i in range(len(table.layer_labels)):
+        assert table.h2d(1, i) > 0
+        assert table.d2h(1, i) > 0
+        for c in CONFIGS:
+            want = table.kernel_time(1, i, c) + (
+                0.0 if c == CPU else table.h2d(1, i) + table.d2h(1, i)
+            )
+            assert table.times[1][i][c] == pytest.approx(want, rel=1e-9)
+    dp = map_efficient_configuration(table, policy="dp")
+    greedy = map_efficient_configuration(table, policy="greedy")
+    assert (
+        dp.expected_time_per_example
+        <= greedy.expected_time_per_example + 1e-12
+    )

@@ -116,3 +116,44 @@ def test_hep_shard_oom_penalty_dominates():
         evaluate, knobs={"fsdp": ("zero1", "zero3")}, log=None
     )
     assert best.scheme.fsdp == "zero3"  # fitting beats fast-but-OOM
+
+def test_hep_shard_transfer_split_in_cost():
+    """h2d/d2h staging is priced separately from the on-device step and
+    can flip the argmin toward a transfer-lighter scheme."""
+    t = ShardTrial(
+        scheme=ShardScheme(), compute_s=1.0, memory_s=0.5,
+        collective_s=0.1, peak_bytes=2**30, h2d_s=0.2, d2h_s=0.05,
+    )
+    assert t.kernel_s == pytest.approx(1.1)
+    assert t.transfer_s == pytest.approx(0.25)
+    assert t.cost == pytest.approx(1.35)
+
+    def evaluate(s: ShardScheme) -> ShardTrial:
+        heavy = s.fsdp == "zero1"  # faster kernel, much heavier staging
+        return ShardTrial(
+            scheme=s, compute_s=0.1 if heavy else 0.12,
+            memory_s=0.0, collective_s=0.0, peak_bytes=2**30,
+            h2d_s=0.5 if heavy else 0.0, d2h_s=0.0,
+        )
+
+    best, _ = search(
+        evaluate, knobs={"fsdp": ("zero1", "zero3")}, log=None
+    )
+    assert best.scheme.fsdp == "zero3"
+
+
+def test_hep_shard_all_failing_knob_skipped():
+    """A knob whose every candidate value fails evaluation must be
+    skipped, not crash the search with min() on an empty list."""
+    def evaluate(s: ShardScheme) -> ShardTrial:
+        if s.tp:
+            raise RuntimeError("tp unsupported on this mesh")
+        return ShardTrial(
+            scheme=s, compute_s=1.0, memory_s=0.0,
+            collective_s=0.0, peak_bytes=2**30,
+        )
+
+    best, _ = search(
+        evaluate, ShardScheme(tp=False), knobs={"tp": (True,)}, log=None
+    )
+    assert best.scheme.tp is False
