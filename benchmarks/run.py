@@ -1,4 +1,5 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure, plus the
+beyond-paper serving path.  Suite-by-suite details: EXPERIMENTS.md.
 
 Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   profile_layers     -> Fig. 4 (per-layer x per-implementation matrix)
@@ -7,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   batch_sweep        -> Fig. 5 (+ Fig. 1 CPU-vs-parallel gap)
   kernel_bench       -> §II-C compute substrate micro-bench
   roofline           -> EXPERIMENTS.md §Roofline (reads results/dryrun)
+  serve_bench        -> beyond-paper: segment-pipelined vs serial
+                        serving (EfficientConfiguration.segments() ->
+                        repro.serving), throughput + p50/p99
 """
 
 from __future__ import annotations
@@ -18,7 +22,7 @@ import time
 def main() -> None:
     from benchmarks import (
         batch_sweep, efficient_configs, kernel_bench, profile_layers,
-        roofline,
+        roofline, serve_bench,
     )
 
     quick = "--quick" in sys.argv
@@ -33,6 +37,10 @@ def main() -> None:
          if quick else {}),
         ("profile_layers", profile_layers.run,
          {"scale": 0.25, "batch_sizes": (1,), "repeats": 1}
+         if quick else {}),
+        ("serve_bench", serve_bench.run,
+         {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1,
+          "n_microbatches": 4, "profile_repeats": 1}
          if quick else {}),
     ]
     print("name,us_per_call,derived")

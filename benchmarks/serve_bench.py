@@ -1,0 +1,134 @@
+"""Serving-path benchmark: segment-pipelined vs serial execution of a
+mixed host/device mapping, across batch sizes.
+
+For each batch size, a burst of micro-batches (all arriving at t0) is
+run (a) serially — one micro-batch at a time, blocking at every
+segment boundary — and (b) through ``SegmentPipeline.run_pipelined``,
+which overlaps the host segments of micro-batch *i+1* with the device
+segments of micro-batch *i*.  Reports examples/s-equivalent throughput
+(``us_per_call`` is us **per example**) and p50/p99 time-in-system per
+micro-batch, plus the cost model's predicted pipeline speedup
+(``EfficientConfiguration.pipelined_expected_time``).  Outputs are
+asserted bit-exact between the two paths.
+
+The mapping is the DP's if it is genuinely mixed (contains both host
+and device segments); otherwise the canonical mixed split — GEMM
+layers (conv/fc) on the device, elementwise layers on the host — is
+forced via ``configuration_from_mapping`` so the pipeline always has
+two stages to overlap.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params, prepare_input_packed
+from repro.core.mapper import (
+    configuration_from_mapping,
+    map_efficient_configuration,
+    segments_of,
+)
+from repro.core.profiler import profile_bnn_model
+from repro.serving import SegmentPipeline, canonical_mixed_mapping
+
+
+def _mixed_mapping(model, ec_dp):
+    segs = segments_of(ec_dp.layer_configs)
+    if len(segs) >= 2:
+        return ec_dp.layer_configs
+    return canonical_mixed_mapping(model)
+
+
+def _percentiles(completions_s):
+    lat_ms = np.asarray(completions_s) * 1e3
+    return (
+        f"p50_ms={np.percentile(lat_ms, 50):.2f};"
+        f"p99_ms={np.percentile(lat_ms, 99):.2f}"
+    )
+
+
+def run(
+    scale: float = 0.5,
+    batch_sizes=(1, 4, 16),
+    repeats: int = 3,
+    n_microbatches: int = 8,
+    profile_repeats: int = 2,
+):
+    m = build_model("fashion_mnist", scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(
+        m, packed, batch_sizes=batch_sizes, repeats=profile_repeats
+    )
+    mapping = _mixed_mapping(
+        m, map_efficient_configuration(table, policy="dp")
+    )
+
+    rows = []
+    for b in batch_sizes:
+        ec = configuration_from_mapping(table, b, mapping)
+        pipe = SegmentPipeline(m, packed, ec)
+        inputs = [
+            prepare_input_packed(
+                jax.random.uniform(
+                    jax.random.PRNGKey(i),
+                    (b, *m.input_hw, m.in_channels),
+                )
+            )
+            for i in range(n_microbatches)
+        ]
+        n_examples = n_microbatches * b
+
+        # warmup / compile both paths, and capture the reference output
+        ref = [pipe.run_serial(x) for x in inputs]
+        got = pipe.run_pipelined(inputs)
+        for r, g in zip(ref, got):
+            assert np.array_equal(r, g), "pipelined != serial output"
+
+        best_serial, serial_done = float("inf"), None
+        best_piped, piped_done = float("inf"), None
+        for _ in range(repeats):
+            done = []
+            t0 = time.perf_counter()
+            for x in inputs:
+                pipe.run_serial(x)
+                done.append(time.perf_counter() - t0)
+            total = time.perf_counter() - t0
+            if total < best_serial:
+                best_serial, serial_done = total, done
+
+            done = [0.0] * n_microbatches
+            t0 = time.perf_counter()
+            pipe.run_pipelined(
+                inputs,
+                on_complete=lambda i, out, t0=t0, done=done: done.__setitem__(
+                    i, time.perf_counter() - t0
+                ),
+            )
+            total = time.perf_counter() - t0
+            if total < best_piped:
+                best_piped, piped_done = total, done
+
+        speedup = best_serial / best_piped
+        est = ec.expected_time_per_example / ec.pipelined_expected_time(
+            n_microbatches
+        )
+        rows.append(
+            (
+                f"serve/{m.name}/b{b}/serial",
+                best_serial / n_examples * 1e6,
+                _percentiles(serial_done),
+            )
+        )
+        rows.append(
+            (
+                f"serve/{m.name}/b{b}/pipelined",
+                best_piped / n_examples * 1e6,
+                _percentiles(piped_done)
+                + f";speedup={speedup:.2f}x;model_est={est:.2f}x",
+            )
+        )
+    return rows

@@ -1,15 +1,20 @@
-"""Batched-request serving through the HEP-mapped BNN.
+"""Batched-request serving through the HEP-mapped BNN, via the
+segment-pipelined serving runtime (``repro.serving``).
 
-A request queue is drained in batches of the mapper's *proper batch
-size* (the paper's deployment story: the generated efficient
-configuration is what you put behind the endpoint). Reports latency
-percentiles and verifies every response against the reference model.
+Profiles the model, maps it with the transfer-aware DP, then stands up
+a :class:`ServingEngine`: single-example requests are coalesced by the
+dynamic micro-batcher (max-batch = the mapper's proper batch size,
+partial batches padded to a profiled batch size) and executed as a
+two-stage host/device segment pipeline.  Reports p50/p99 request
+latency and verifies every response bit-exact against the reference
+model.
 
     PYTHONPATH=src python examples/serve_mapped.py
+    PYTHONPATH=src python examples/serve_mapped.py \
+        --requests 256 --scale 0.25 --policy greedy --max-wait-ms 5
 """
 
-import json
-import time
+import argparse
 from pathlib import Path
 
 import jax
@@ -19,47 +24,71 @@ from repro.bnn import build_model
 from repro.bnn.models import (
     forward_packed, pack_params, prepare_input_packed,
 )
-from repro.core import build_mapped_model, map_efficient_configuration
+from repro.core import map_efficient_configuration
 from repro.core.profiler import profile_bnn_model
 from repro.data import make_image_dataset
+from repro.serving import ServingEngine
 
 
 def main():
-    model = build_model("fashion_mnist", scale=0.5)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--policy", default="dp", choices=("greedy", "dp"))
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args()
+
+    model = build_model("fashion_mnist", scale=args.scale)
     packed = pack_params(model.specs, model.init(jax.random.PRNGKey(0)))
 
     table = profile_bnn_model(model, packed, batch_sizes=(1, 4, 16),
                               repeats=2)
-    ec = map_efficient_configuration(table)
+    ec = map_efficient_configuration(table, policy=args.policy)
     artifact = Path("results") / "efficient_config_fmnist.json"
     artifact.parent.mkdir(exist_ok=True)
     artifact.write_text(ec.to_json())
     print(f"wrote mapping artifact -> {artifact}")
-
-    mapped = build_mapped_model(model, packed, ec)
-    bs = ec.proper_batch_size
-
-    ds = make_image_dataset(7, 512, model.input_hw, model.in_channels)
-    lat = []
-    correct = 0
-    for i in range(0, 512 - bs + 1, bs):
-        x = ds.x[i : i + bs]
-        xw = prepare_input_packed(x)
-        t0 = time.perf_counter()
-        scores = mapped(xw)
-        jax.block_until_ready(scores)
-        lat.append((time.perf_counter() - t0) / bs)
-        ref = forward_packed(model.specs, packed, xw)
-        assert np.array_equal(np.asarray(scores), np.asarray(ref))
-        correct += int(np.sum(np.argmax(np.asarray(scores), -1)
-                              == ds.y[i : i + bs]))
-    lat_us = np.asarray(lat) * 1e6
-    n = (512 // bs) * bs
+    segs = ec.segments()
     print(
-        f"served {n} requests @ batch {bs}: "
-        f"p50 {np.percentile(lat_us,50):.0f}us/img  "
-        f"p99 {np.percentile(lat_us,99):.0f}us/img  "
-        f"(untrained acc {correct/n:.3f})"
+        f"schedule: {len(segs)} segments "
+        + " ".join(f"[{s.placement[0].upper()}x{len(s)}]" for s in segs)
+        + f", proper batch {ec.proper_batch_size}"
+    )
+
+    engine = ServingEngine(
+        model, packed, ec,
+        max_wait_s=args.max_wait_ms * 1e-3,
+        allowed_batch_sizes=table.batch_sizes,
+    )
+
+    n = args.requests
+    ds = make_image_dataset(7, n, model.input_hw, model.in_channels)
+    xw_all = np.asarray(prepare_input_packed(ds.x))
+    # trickle requests in, stepping as we go: full micro-batches drain
+    # immediately, stragglers age out under --max-wait-ms, and a final
+    # forced step flushes the partial tail
+    reqs = []
+    served = 0
+    for i in range(n):
+        reqs.append(engine.submit(xw_all[i]))
+        served += engine.step()
+    served += engine.step(force=True)
+    assert served == n
+
+    ref = np.asarray(forward_packed(model.specs, packed, xw_all))
+    correct = 0
+    lat_us = []
+    for i, r in enumerate(reqs):
+        scores = r.wait(timeout=1.0)
+        assert np.array_equal(scores, ref[i]), f"response {i} mismatch"
+        lat_us.append(r.latency_s * 1e6)
+        correct += int(np.argmax(scores) == ds.y[i])
+    lat_us = np.asarray(lat_us)
+    print(
+        f"served {n} requests @ max_batch {engine.batcher.max_batch}: "
+        f"p50 {np.percentile(lat_us, 50):.0f}us  "
+        f"p99 {np.percentile(lat_us, 99):.0f}us  "
+        f"(untrained acc {correct / n:.3f})"
     )
     print("all responses verified exact vs reference")
 

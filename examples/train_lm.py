@@ -5,6 +5,7 @@ checkpoints with exact resume, straggler watchdog.
     PYTHONPATH=src python examples/train_lm.py --arch qwen2_0_5b \
         --steps 60 --batch 8 --seq 128
     # kill it mid-run and re-run: it resumes from the latest checkpoint
+    # (--ckpt sets the checkpoint dir, default results/train_lm_ckpt)
 
     --full uses the exact assigned config (for real hardware; the smoke
     config is the CPU default).

@@ -7,7 +7,7 @@ Shapes (assigned to every LM arch):
   prefill_32k  seq 32,768  global_batch 32    (prefill_step)
   decode_32k   seq 32,768  global_batch 128   (serve_step, 1 new token)
   long_500k    seq 524,288 global_batch 1     (serve_step; sub-quadratic
-                                               archs only — see DESIGN.md)
+                                               archs only — see docs/ARCHITECTURE.md §7)
 """
 
 from __future__ import annotations

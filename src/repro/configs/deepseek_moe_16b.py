@@ -1,7 +1,7 @@
 """deepseek-moe-16b [moe] — 28L d2048 16H(kv16) expert_ff=1408
 vocab=102400; 2 shared + 64 routed top-6, fine-grained experts
 [arXiv:2401.06066]. Simplification vs HF: the real model's first layer
-uses a dense MLP; here all 28 layers are MoE (noted in DESIGN.md)."""
+uses a dense MLP; here all 28 layers are MoE (noted in docs/ARCHITECTURE.md §7)."""
 
 from repro.models.config import ModelConfig, MoEConfig
 

@@ -1,7 +1,7 @@
 """grok-1-314b [moe] — 64L d6144 48H(kv8) d_ff=32768 vocab=131072;
 8 experts top-2 [hf:xai-org/grok-1]. Routed experts use the gated-SiLU
 form of this framework (grok's GeGLU variant differs only in the
-activation; noted in DESIGN.md)."""
+activation; noted in docs/ARCHITECTURE.md §7)."""
 
 from repro.models.config import ModelConfig, MoEConfig
 

@@ -3,7 +3,7 @@ ssm_state=128, SSD (state-space duality) [arXiv:2405.21060].
 d_inner = 2*768 = 1536, head_dim 64 -> 24 SSD heads. Sub-quadratic:
 runs the long_500k cell. The paper's attention-sharding candidates are
 inapplicable (attention-free) — the X/Y/Z kernel aspects still apply to
-its matmuls; see DESIGN.md §Arch-applicability."""
+its matmuls; see docs/ARCHITECTURE.md §7."""
 
 from repro.models.config import ModelConfig, SSMConfig
 

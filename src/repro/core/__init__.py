@@ -4,11 +4,15 @@
   (CPU + 7 parallel configurations built from the X/Y/Z aspects).
 * :mod:`profiler` — per-layer latency profiling across implementations
   and batch sizes, including host<->device boundary costs.
-* :mod:`mapper` — Algorithm 1: greedy per-layer argmin + proper batch
-  size selection -> EfficientConfiguration.
+* :mod:`mapper` — layer-to-implementation mapping: the paper's greedy
+  Algorithm 1 (``policy="greedy"``) and the transfer-aware Viterbi DP
+  (``policy="dp"``) -> EfficientConfiguration, whose ``segments()``
+  splits the mapping into the same-placement runs the serving runtime
+  (:mod:`repro.serving`) executes.
 * :mod:`mapped_model` — builds the executable model from an
   EfficientConfiguration (the JAX analogue of the paper's generated
-  CUDA/C++ code) and serializes the mapping artifact.
+  CUDA/C++ code): fused and paper-faithful whole-model drivers plus
+  ``build_segment_fns`` for the segment pipeline.
 * :mod:`cost_model` — analytic TPU v5e cost model (roofline terms per
   layer x config) used when the target hardware is not the host.
 * :mod:`hep_shard` — the paper's algorithm lifted to multi-pod scale:
@@ -19,8 +23,10 @@
 from repro.core.parallel_config import CONFIGS, ASPECT_CONFIGS, aspects_of
 from repro.core.mapper import (
     EfficientConfiguration,
+    Segment,
     map_efficient_configuration,
+    segments_of,
     uniform_total,
 )
 from repro.core.profiler import profile_bnn_model, ProfileTable
-from repro.core.mapped_model import build_mapped_model
+from repro.core.mapped_model import build_mapped_model, build_segment_fns

@@ -221,3 +221,31 @@ def layer_time_split_tpu(
 def layer_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
     kern, h2d, d2h = layer_time_split_tpu(spec, config, batch)
     return kern + h2d + d2h
+
+
+def pipeline_makespan(
+    host_s: float, device_s: float, n_microbatches: int
+) -> float:
+    """Makespan of a two-stage software pipeline over a micro-batch
+    stream (the serving runtime in ``repro.serving.pipeline``).
+
+    Stage H (host segments, ``host_s`` seconds per micro-batch) and
+    stage D (device segments plus boundary transfers, ``device_s``)
+    overlap across micro-batches: while micro-batch *i* occupies the
+    device, micro-batch *i+1* runs its host segments.  The classic
+    fill-drain formula::
+
+        makespan = host_s + device_s + (n - 1) * max(host_s, device_s)
+
+    For n == 1 this is the serial latency; the steady-state rate is one
+    micro-batch per max(host_s, device_s), which is what
+    ``EfficientConfiguration.pipelined_expected_time`` reports per
+    example.
+    """
+    if n_microbatches <= 0:
+        return 0.0
+    return (
+        host_s
+        + device_s
+        + (n_microbatches - 1) * max(host_s, device_s)
+    )

@@ -18,6 +18,13 @@ for a ``policy="dp"`` configuration (or with ``elide_transfers=True``)
 it keeps the activation on the device across consecutive non-CPU
 layers and only crosses the host boundary where the placement changes
 — exactly the cost model the DP mapper optimizes.
+
+A third consumer is the serving runtime: :func:`build_segment_fns`
+compiles one jitted callable per *segment* of the configuration
+(``EfficientConfiguration.segments()`` — maximal same-placement layer
+runs), which ``repro.serving.pipeline.SegmentPipeline`` executes as a
+two-stage host/device software pipeline behind the micro-batching
+front end in ``repro.serving.engine.ServingEngine``.
 """
 
 from __future__ import annotations
@@ -76,6 +83,19 @@ def _layer_fn(spec, packed, config: str) -> Callable:
     raise ValueError(spec.kind)
 
 
+def _layer_fns(
+    model: BNNModel, packed_params: list, config: EfficientConfiguration
+) -> list:
+    """Per-layer callables under the mapping — the single source both
+    the whole-model drivers and the segment builder compose from."""
+    return [
+        _layer_fn(spec, packed, cfg)
+        for spec, packed, cfg in zip(
+            model.specs, packed_params, config.layer_configs
+        )
+    ]
+
+
 def build_mapped_model(
     model: BNNModel,
     packed_params: list,
@@ -93,12 +113,7 @@ def build_mapped_model(
     every non-CPU layer (paper §IV-A).  ``None`` follows the mapping
     policy — DP configurations were priced under elision.
     """
-    fns = [
-        _layer_fn(spec, packed, cfg)
-        for spec, packed, cfg in zip(
-            model.specs, packed_params, config.layer_configs
-        )
-    ]
+    fns = _layer_fns(model, packed_params, config)
 
     if fused:
         @jax.jit
@@ -133,3 +148,32 @@ def build_mapped_model(
         return np.asarray(x)
 
     return run_faithful
+
+
+def build_segment_fns(
+    model: BNNModel,
+    packed_params: list,
+    config: EfficientConfiguration,
+) -> list:
+    """One jitted callable per segment of `config`, in execution order.
+
+    Returns ``[(Segment, fn), ...]`` where each fn composes the
+    segment's layer implementations into a single XLA executable —
+    interior layer boundaries carry no host roundtrip, matching the
+    elision the DP mapper priced.  All arithmetic is integer/bool, so
+    composition is bit-exact versus per-layer execution.
+    """
+    fns = _layer_fns(model, packed_params, config)
+
+    def segment_fn(seg):
+        seg_fns = fns[seg.start : seg.stop]
+
+        @jax.jit
+        def run(x):
+            for f in seg_fns:
+                x = f(x)
+            return x
+
+        return run
+
+    return [(seg, segment_fn(seg)) for seg in config.segments()]

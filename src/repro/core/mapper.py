@@ -48,6 +48,61 @@ from repro.core.profiler import ProfileTable
 
 POLICIES = ("greedy", "dp")
 
+HOST = "host"
+DEVICE = "device"
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A maximal run of consecutive layers with the same placement.
+
+    Segments are the unit of execution in the serving runtime
+    (``repro.serving``): the activation crosses the host<->device
+    boundary exactly once between adjacent segments, which is the same
+    set of crossings the DP mapper charges boundary cost for.
+    """
+
+    start: int            # first layer index, inclusive
+    stop: int             # one past the last layer index
+    placement: str        # HOST or DEVICE
+    configs: tuple        # per-layer configs for layers [start, stop)
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def on_device(self) -> bool:
+        return self.placement == DEVICE
+
+
+def placement_of(config: str) -> str:
+    """CPU is host-placed; every aspect config runs on the device."""
+    return HOST if config == CPU else DEVICE
+
+
+def segments_of(layer_configs: Sequence[str]) -> tuple:
+    """Split a per-layer config sequence into maximal same-placement
+    runs.  Segment boundaries are exactly the host<->device placement
+    changes — the points where the DP mapper charges an edge cost and
+    where the fused/serving executors move the activation."""
+    segs: list = []
+    start = 0
+    for i in range(1, len(layer_configs) + 1):
+        if i == len(layer_configs) or (
+            placement_of(layer_configs[i])
+            != placement_of(layer_configs[start])
+        ):
+            segs.append(
+                Segment(
+                    start=start,
+                    stop=i,
+                    placement=placement_of(layer_configs[start]),
+                    configs=tuple(layer_configs[start:i]),
+                )
+            )
+            start = i
+    return tuple(segs)
+
 
 @dataclasses.dataclass(frozen=True)
 class EfficientConfiguration:
@@ -64,6 +119,62 @@ class EfficientConfiguration:
     # non-CPU layer for greedy, placement-change edges only for dp)
     per_layer_kernel_times: tuple = ()
     per_layer_boundary_times: tuple = ()
+
+    def segments(self) -> tuple:
+        """Maximal same-placement layer runs (:func:`segments_of`) —
+        the schedule the serving runtime executes."""
+        return segments_of(self.layer_configs)
+
+    def stage_times(self) -> tuple:
+        """(host_s, device_s) per example: total time this
+        configuration spends in host-placed vs device-placed segments,
+        boundary charges counted on the device side (they serialize
+        with device execution, not with host compute).
+
+        Prices the *segment* executor, which crosses the boundary only
+        at segment edges — so boundary charges on interior layers of a
+        device segment are dropped.  For ``policy="dp"`` attributions
+        they are zero anyway and the split is exact; for greedy
+        configurations (full per-layer roundtrips) the edge layers'
+        charges remain a modest upper bound (an entry layer's stored
+        boundary includes a d2h the segment executor elides, and vice
+        versa at exit).
+
+        Requires the kernel/boundary split; a legacy configuration
+        without it attributes everything to per_layer_times with zero
+        boundary, which is still a valid split for the estimate.
+        """
+        kernels = self.per_layer_kernel_times or self.per_layer_times
+        boundaries = self.per_layer_boundary_times or (0.0,) * len(
+            self.per_layer_times
+        )
+        host = device = 0.0
+        for seg in self.segments():
+            for i in range(seg.start, seg.stop):
+                t = kernels[i]
+                if seg.on_device:
+                    if i in (seg.start, seg.stop - 1):
+                        t += boundaries[i]
+                    device += t
+                else:
+                    host += t + boundaries[i]
+        return host, device
+
+    def pipelined_expected_time(self, n_microbatches: int) -> float:
+        """Expected seconds/example of the two-stage segment pipeline
+        over ``n_microbatches`` micro-batches of the proper batch size
+        (``repro.core.cost_model.pipeline_makespan``).  With one
+        micro-batch this equals ``expected_time_per_example`` for a
+        DP configuration (for greedy it is lower: the segment executor
+        elides the interior roundtrips greedy priced); as the stream
+        grows it approaches max(host, device) per micro-batch — the
+        steady-state rate the serving runtime targets."""
+        from repro.core.cost_model import pipeline_makespan
+
+        host, device = self.stage_times()
+        return pipeline_makespan(host, device, n_microbatches) / max(
+            n_microbatches, 1
+        )
 
     def to_json(self) -> str:
         layers = []
@@ -187,11 +298,12 @@ def _dp_for_batch(
     return total, mapping
 
 
-def _attribute_dp_costs(
+def attribute_fused_costs(
     table: ProfileTable, batch: int, mapping: Sequence[str]
 ) -> tuple:
-    """(kernel, boundary) per layer for a DP mapping: h2d charged to the
-    layer entering the device, d2h to the layer leaving it."""
+    """(kernel, boundary) per layer for a mapping priced under the
+    fused/segment executor: h2d charged to the layer entering the
+    device, d2h to the layer leaving it."""
     n_layers = len(mapping)
     kernels, boundaries = [], []
     for i, c in enumerate(mapping):
@@ -249,7 +361,7 @@ def map_efficient_configuration(
             for i, c in enumerate(best_mapping)
         )
     else:
-        kernels, boundaries = _attribute_dp_costs(
+        kernels, boundaries = attribute_fused_costs(
             table, proper_batch, best_mapping
         )
 
@@ -263,6 +375,47 @@ def map_efficient_configuration(
             k + b for k, b in zip(kernels, boundaries)
         ),
         policy=policy,
+        per_layer_kernel_times=kernels,
+        per_layer_boundary_times=boundaries,
+    )
+
+
+def configuration_from_mapping(
+    table: ProfileTable,
+    batch: int,
+    mapping: Sequence[str],
+) -> EfficientConfiguration:
+    """Price an explicit per-layer mapping at `batch` under the fused
+    cost model and wrap it as an EfficientConfiguration.
+
+    For pinning a schedule by hand — serving experiments on a forced
+    mixed host/device split, ablations, regression fixtures — rather
+    than letting a policy choose one.  The result carries
+    ``policy="dp"`` semantics: boundary cost only at placement
+    changes, so ``segments()`` / the serving pipeline execute exactly
+    what was priced.
+    """
+    if batch not in table.batch_sizes:
+        raise ValueError(
+            f"batch {batch} not profiled (have {table.batch_sizes})"
+        )
+    if len(mapping) != len(table.layer_labels):
+        raise ValueError(
+            f"mapping covers {len(mapping)} layers, model has "
+            f"{len(table.layer_labels)}"
+        )
+    mapping = tuple(validate(c) for c in mapping)
+    kernels, boundaries = attribute_fused_costs(table, batch, mapping)
+    return EfficientConfiguration(
+        model_name=table.model_name,
+        proper_batch_size=int(batch),
+        layer_labels=table.layer_labels,
+        layer_configs=mapping,
+        expected_time_per_example=sum(kernels) + sum(boundaries),
+        per_layer_times=tuple(
+            k + b for k, b in zip(kernels, boundaries)
+        ),
+        policy="dp",
         per_layer_kernel_times=kernels,
         per_layer_boundary_times=boundaries,
     )

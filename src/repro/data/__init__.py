@@ -1,5 +1,5 @@
 """Deterministic synthetic data pipeline (this container is offline —
-no Fashion-MNIST/CIFAR downloads; see DESIGN.md §6). Streams are pure
+no Fashion-MNIST/CIFAR downloads; see docs/ARCHITECTURE.md §6). Streams are pure
 functions of (seed, step) so training resumes exactly after restart."""
 
 from repro.data.synthetic import (

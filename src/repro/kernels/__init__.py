@@ -1,8 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 * ``xnor_popcount`` — the BNN binary GEMM (conv-as-GEMM and FC), grid
-  parameterized by the paper's X/Y/Z parallelism aspects (see DESIGN.md
-  §2): aspect axes become *parallel* grid dimensions, non-aspect axes
+  parameterized by the paper's X/Y/Z parallelism aspects (see
+  docs/ARCHITECTURE.md §2): aspect axes become *parallel* grid
+  dimensions, non-aspect axes
   *arbitrary* (sequential) ones — the TPU-native analogue of CUDA
   thread-block decomposition vs in-block serialization.
 * ``flash_attention`` — blockwise-softmax attention for LM prefill.

@@ -1,6 +1,6 @@
 """Bit-packed xnor/popcount binary GEMM as a Pallas TPU kernel.
 
-Unified layer compute (see DESIGN.md): activations are packed words
+Unified layer compute (see docs/ARCHITECTURE.md §2): activations are packed words
 ``a (B, P, Kw) int32`` (P = conv windows per image, or 1 for FC), weights
 ``w (N, Kw) int32`` (N output channels / neurons), output
 ``o (B, P, N) int32`` with the exact {-1,+1} dot product

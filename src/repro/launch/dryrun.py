@@ -130,7 +130,7 @@ def run_cell(
             "arch": arch, "shape": shape, "multi_pod": multi_pod,
             "status": "skipped",
             "reason": "long_500k needs sub-quadratic attention "
-                      "(full-attention arch; see DESIGN.md)",
+                      "(full-attention arch; see docs/ARCHITECTURE.md §7)",
         }
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size

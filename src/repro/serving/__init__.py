@@ -1,0 +1,17 @@
+"""Serving runtime for HEP-mapped BNNs — the inference stack the
+paper's cost model assumes.
+
+* :mod:`pipeline` — :class:`SegmentPipeline`: executes the mapper's
+  segments (maximal same-placement layer runs) as a two-stage software
+  pipeline, overlapping the host segments of micro-batch *i+1* with
+  the device segments of micro-batch *i*.
+* :mod:`batcher` — :class:`MicroBatcher`: dynamic request coalescing
+  with max-batch / max-wait knobs and padding to profiled batch sizes
+  so the ProfileTable entries stay valid.
+* :mod:`engine` — :class:`ServingEngine`: the front end gluing the
+  two together behind ``submit()`` / ``step()``.
+"""
+
+from repro.serving.batcher import MicroBatch, MicroBatcher, Request, pad_to
+from repro.serving.engine import ServingEngine
+from repro.serving.pipeline import SegmentPipeline, canonical_mixed_mapping

@@ -1,0 +1,95 @@
+"""The serving front end: micro-batching + segment pipelining behind
+``submit()`` / ``step()``.
+
+    engine = ServingEngine(model, packed, ec,
+                           allowed_batch_sizes=table.batch_sizes)
+    reqs = [engine.submit(x_words_one_example) for x in traffic]
+    engine.step(force=True)          # or step() in a poll loop
+    scores = [r.wait() for r in reqs]
+
+``step()`` drains every ready micro-batch from the batcher and runs
+them *together* through the segment pipeline, so a burst of traffic is
+where the pipelining pays: the host segments of one micro-batch
+overlap the device segments of the previous one.  Each request is
+completed (result + latency timestamp) the moment its micro-batch's
+output materializes, not when the whole wave-train finishes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+from repro.bnn.models import BNNModel
+from repro.core.mapper import EfficientConfiguration
+from repro.serving.batcher import MicroBatcher, Request
+from repro.serving.pipeline import SegmentPipeline
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        model: BNNModel,
+        packed_params: list,
+        config: EfficientConfiguration,
+        *,
+        max_batch: int | None = None,
+        max_wait_s: float = 2e-3,
+        allowed_batch_sizes: Sequence[int] | None = None,
+        clock=time.monotonic,
+        device=None,
+    ):
+        """``max_batch`` defaults to the mapper's proper batch size —
+        the batch the configuration was optimized for.  Pass the
+        ProfileTable's ``batch_sizes`` as ``allowed_batch_sizes`` so
+        partial batches pad to a profiled size."""
+        if max_batch is None:
+            max_batch = config.proper_batch_size
+        if allowed_batch_sizes is None:
+            allowed_batch_sizes = (max_batch,)
+        self.config = config
+        self.pipeline = SegmentPipeline(
+            model, packed_params, config, device=device
+        )
+        self.batcher = MicroBatcher(
+            max_batch=max_batch,
+            max_wait_s=max_wait_s,
+            allowed_batch_sizes=allowed_batch_sizes,
+            clock=clock,
+        )
+        self._clock = clock
+        self.served = 0
+
+    def submit(self, x_words_one) -> Request:
+        """Enqueue one example (packed words, no batch dim)."""
+        return self.batcher.submit(x_words_one)
+
+    def step(self, *, force: bool = False) -> int:
+        """Drain ready micro-batches (all pending ones when ``force``)
+        and execute them pipelined.  Returns requests completed."""
+        batches = self.batcher.drain(force=force)
+        if not batches:
+            return 0
+
+        def complete(i, out):
+            mb = batches[i]
+            now = self._clock()
+            for j, req in enumerate(mb.requests):
+                req.complete(out[j], now)   # pad rows out[n_real:] dropped
+
+        try:
+            self.pipeline.run_pipelined(
+                [mb.x for mb in batches], on_complete=complete
+            )
+        except BaseException as e:
+            # requests already popped off the queue must not be lost:
+            # fail every not-yet-completed one so waiters see the error
+            now = self._clock()
+            for mb in batches:
+                for req in mb.requests:
+                    if req.done_t is None:
+                        req.fail(e, now)
+            raise
+        done = sum(mb.n_real for mb in batches)
+        self.served += done
+        return done

@@ -1,0 +1,160 @@
+"""Segment-pipelined execution of a mapped BNN.
+
+The mapper's :meth:`EfficientConfiguration.segments` splits the layer
+sequence into maximal same-placement runs; adjacent segments alternate
+host <-> device, so execution is a chain
+
+    [host seg] -> H2D -> [device seg] -> D2H -> [host seg] -> ...
+
+:class:`SegmentPipeline` runs a *stream* of micro-batches through that
+chain as a software pipeline: micro-batch ``i`` enters at wave ``i``
+and advances one segment per wave, so in any wave at most one
+micro-batch occupies each segment.  Within a wave, device segments are
+dispatched first (JAX async dispatch returns immediately) and host
+segments run afterwards on the Python thread — overlapping the host
+work of micro-batch *i+1* with the in-flight device work of
+micro-batch *i*.  H2D uploads are double-buffered: micro-batch
+*i+1*'s input is staged with :func:`jax.device_put` while wave *i* is
+still executing, and the D2H sync for a device segment's output is
+deferred one full wave, so the download price is paid only after the
+device had a wave's worth of time to finish.
+
+Placement is modeled the same way as the faithful
+``mapped_model`` driver: "host" activations are materialized
+``numpy`` arrays, "device" activations are JAX arrays left to XLA's
+asynchronous runtime.  On a CPU-only container both ultimately
+execute on the XLA host device, but the sync structure — where the
+Python thread blocks, where transfers are staged — is exactly the one
+the cost model prices, and it is the structure that generalizes to a
+real accelerator backend.
+
+All arithmetic is int32/bool, so pipelined, serial, and fused
+execution are bit-exact for the same inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.bnn.models import BNNModel
+from repro.core.mapped_model import build_segment_fns
+from repro.core.mapper import EfficientConfiguration
+from repro.core.parallel_config import CPU, FULL_GPU
+
+
+def canonical_mixed_mapping(model: BNNModel) -> tuple:
+    """The canonical mixed host/device split for serving experiments:
+    GEMM layers (conv/fc) on the device, elementwise layers on the
+    host — guarantees alternating segments so the two-stage pipeline
+    has work to overlap.  Shared by benchmarks and tests so they
+    exercise the same schedule."""
+    return tuple(
+        FULL_GPU if s.kind in ("conv", "fc") else CPU
+        for s in model.specs
+    )
+
+
+class SegmentPipeline:
+    """Compiled per-segment executables plus serial and pipelined
+    drivers over them."""
+
+    def __init__(
+        self,
+        model: BNNModel,
+        packed_params: list,
+        config: EfficientConfiguration,
+        *,
+        device=None,
+    ):
+        self.config = config
+        self.segment_fns = build_segment_fns(model, packed_params, config)
+        self.device = device if device is not None else jax.devices()[0]
+
+    @property
+    def segments(self) -> tuple:
+        return tuple(seg for seg, _ in self.segment_fns)
+
+    # -- serial reference: one micro-batch at a time, Python thread
+    #    blocks at every segment boundary (no overlap) ---------------
+    def run_serial(self, x_words) -> np.ndarray:
+        x = np.asarray(x_words)
+        for seg, fn in self.segment_fns:
+            if seg.on_device:
+                out = fn(jax.device_put(x, self.device))
+                jax.block_until_ready(out)
+                x = np.asarray(out)          # D2H before the next segment
+            else:
+                out = fn(x)
+                jax.block_until_ready(out)
+                x = out
+        return np.asarray(x)
+
+    # -- pipelined driver over a micro-batch stream ------------------
+    def run_pipelined(
+        self,
+        inputs: Sequence,
+        *,
+        on_complete: Callable | None = None,
+    ) -> list:
+        """Run `inputs` (a list of micro-batch word arrays) through the
+        segment chain with a one-segment-per-wave skew.
+
+        ``on_complete(i, out)`` fires as soon as micro-batch ``i``'s
+        output is materialized on the host — the per-micro-batch
+        completion point for latency measurement.  Returns outputs in
+        input order.
+        """
+        segs = self.segment_fns
+        k, n = len(segs), len(inputs)
+        if n == 0:
+            return []
+        first_on_device = segs[0][0].on_device
+        state: list = [None] * n
+        staged: list = [None] * n
+        outputs: list = [None] * n
+
+        def stage(i):
+            # double-buffered H2D: the upload is issued a wave before
+            # micro-batch i first executes
+            x = np.asarray(inputs[i])
+            staged[i] = (
+                jax.device_put(x, self.device) if first_on_device else x
+            )
+
+        stage(0)
+        for w in range(n + k - 1):
+            active = [
+                (i, w - i)
+                for i in range(max(0, w - k + 1), min(n - 1, w) + 1)
+            ]
+            if w + 1 < n:
+                stage(w + 1)
+            # device advances first: async dispatch keeps the device
+            # busy while this wave's host segments run below
+            for i, s in active:
+                seg, fn = segs[s]
+                if seg.on_device:
+                    x = staged[i] if s == 0 else state[i]
+                    staged[i] = None        # keep only ~2 live buffers
+                    if not isinstance(x, jax.Array):
+                        x = jax.device_put(x, self.device)
+                    state[i] = fn(x)
+            # host advances: np.asarray is the deferred D2H sync on the
+            # previous wave's device output
+            for i, s in active:
+                seg, fn = segs[s]
+                if not seg.on_device:
+                    x = staged[i] if s == 0 else state[i]
+                    staged[i] = None
+                    state[i] = fn(np.asarray(x))
+            # completions: micro-batch i leaves the pipeline
+            for i, s in active:
+                if s == k - 1:
+                    outputs[i] = np.asarray(state[i])
+                    state[i] = None
+                    if on_complete is not None:
+                        on_complete(i, outputs[i])
+        return outputs

@@ -1,0 +1,43 @@
+"""Project docs stay present and internally consistent: the CI docs
+job runs the same checker, this keeps it honest under tier-1."""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs_links as cdl  # noqa: E402
+
+
+def test_required_docs_exist():
+    for name in ("README.md", "EXPERIMENTS.md", "docs/ARCHITECTURE.md"):
+        assert (ROOT / name).exists(), f"{name} missing"
+
+
+def test_no_broken_relative_links():
+    assert cdl.broken_links(ROOT) == []
+
+
+def test_checker_flags_broken_link(tmp_path):
+    (tmp_path / "README.md").write_text("see [gone](missing.md)")
+    (tmp_path / "EXPERIMENTS.md").write_text("ok [self](README.md)")
+    bad = cdl.broken_links(tmp_path)
+    assert [(str(d), t) for d, t in bad] == [("README.md", "missing.md")]
+    assert cdl.main(["check", str(tmp_path)]) == 1
+
+
+def test_docstring_references_resolve():
+    """Module docstrings that cite docs/ARCHITECTURE.md sections must
+    point at sections that exist (guards against renumbering)."""
+    arch = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    import re
+
+    sections = set(re.findall(r"^## (\d+)\.", arch, re.M))
+    cited = set()
+    for py in (ROOT / "src").rglob("*.py"):
+        cited |= set(
+            re.findall(r"ARCHITECTURE\.md §(\d+)", py.read_text())
+        )
+    assert cited, "expected docstrings to cite ARCHITECTURE.md sections"
+    assert cited <= sections, f"dangling section refs: {cited - sections}"

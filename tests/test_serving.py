@@ -1,0 +1,412 @@
+"""Serving runtime: segment extraction vs DP boundary attribution,
+batcher coalescing/padding invariants, and pipelined bit-exactness
+versus the serial and fused executors."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.cost_model import pipeline_makespan
+from repro.core.mapped_model import build_mapped_model
+from repro.core.mapper import (
+    DEVICE,
+    HOST,
+    configuration_from_mapping,
+    map_efficient_configuration,
+    placement_of,
+    segments_of,
+)
+from repro.core.parallel_config import ASPECT_CONFIGS, CONFIGS, CPU
+from repro.core.profiler import ProfileTable
+from repro.serving import (
+    MicroBatcher,
+    ServingEngine,
+    SegmentPipeline,
+    canonical_mixed_mapping,
+    pad_to,
+)
+
+
+# ---------------------------------------------------------------------------
+# segment extraction
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_segments_partition_layers_and_are_maximal(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 12))
+    cfgs = tuple(CONFIGS[i] for i in rng.integers(0, len(CONFIGS), n))
+    segs = segments_of(cfgs)
+    # exact ordered partition of the layer range
+    assert segs[0].start == 0 and segs[-1].stop == n
+    for a, b in zip(segs, segs[1:]):
+        assert a.stop == b.start
+        assert a.placement != b.placement          # maximality
+    # placement and configs consistent with the input
+    rebuilt = []
+    for s in segs:
+        assert s.placement in (HOST, DEVICE)
+        for c in s.configs:
+            assert placement_of(c) == s.placement
+        rebuilt.extend(s.configs)
+    assert tuple(rebuilt) == cfgs
+
+
+def _random_split_table(rng, n_layers=6, batches=(1, 2)):
+    kernel, times, h2d, d2h = {}, {}, {}, {}
+    for b in batches:
+        kernel[b], times[b], h2d[b], d2h[b] = [], [], [], []
+        for _ in range(n_layers):
+            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            up = float(rng.uniform(1e-6, 5e-4))
+            down = float(rng.uniform(1e-6, 5e-4))
+            times[b].append({
+                c: krow[c] if c == CPU else krow[c] + up + down
+                for c in CONFIGS
+            })
+            kernel[b].append(krow)
+            h2d[b].append(up)
+            d2h[b].append(down)
+    return ProfileTable(
+        "synthetic", tuple(batches),
+        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
+        kernel_times=kernel, h2d_times=h2d, d2h_times=d2h,
+    )
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_segments_match_dp_boundary_attribution(seed):
+    """The DP charges boundary cost exactly where segments() places a
+    host<->device crossing: h2d on the first layer of each device
+    segment, d2h on its last."""
+    table = _random_split_table(np.random.default_rng(seed))
+    ec = map_efficient_configuration(table, policy="dp")
+    b = ec.proper_batch_size
+    expected = [0.0] * len(ec.layer_configs)
+    for seg in ec.segments():
+        if seg.on_device:
+            expected[seg.start] += table.h2d(b, seg.start)
+            expected[seg.stop - 1] += table.d2h(b, seg.stop - 1)
+    assert ec.per_layer_boundary_times == pytest.approx(expected)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_configuration_from_mapping_prices_placement_changes_only(seed):
+    rng = np.random.default_rng(seed)
+    table = _random_split_table(rng)
+    mapping = tuple(
+        CONFIGS[i] for i in rng.integers(0, len(CONFIGS), 6)
+    )
+    ec = configuration_from_mapping(table, 1, mapping)
+    assert ec.layer_configs == mapping
+    assert ec.expected_time_per_example == pytest.approx(
+        sum(ec.per_layer_times)
+    )
+    # interior layers of a segment carry zero boundary
+    for seg in ec.segments():
+        for i in range(seg.start + 1, seg.stop - 1):
+            assert ec.per_layer_boundary_times[i] == 0.0
+        if not seg.on_device:
+            for i in range(seg.start, seg.stop):
+                assert ec.per_layer_boundary_times[i] == 0.0
+
+
+def test_configuration_from_mapping_validates():
+    table = _random_split_table(np.random.default_rng(0))
+    with pytest.raises(ValueError, match="not profiled"):
+        configuration_from_mapping(table, 64, ("CPU",) * 6)
+    with pytest.raises(ValueError, match="covers"):
+        configuration_from_mapping(table, 1, ("CPU",) * 3)
+
+
+# ---------------------------------------------------------------------------
+# pipeline cost estimate
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_makespan_formula():
+    assert pipeline_makespan(2.0, 3.0, 0) == 0.0
+    assert pipeline_makespan(2.0, 3.0, 1) == pytest.approx(5.0)
+    # steady state: one micro-batch per max(stage) after fill
+    assert pipeline_makespan(2.0, 3.0, 5) == pytest.approx(5.0 + 4 * 3.0)
+
+
+def test_stage_times_drop_interior_boundaries_for_greedy():
+    """A greedy configuration charges a full roundtrip on every device
+    layer, but the segment executor crosses the boundary only at
+    segment edges — stage_times must price the latter."""
+    table = _random_split_table(np.random.default_rng(21), n_layers=5)
+    mapping = ("XYZ", "XYZ", "XYZ", "CPU", "X")
+    b = 1
+    kernels = tuple(
+        table.kernel_time(b, i, c) for i, c in enumerate(mapping)
+    )
+    # greedy-style attribution: full h2d+d2h on every non-CPU layer
+    from repro.core.mapper import EfficientConfiguration
+
+    boundaries = tuple(
+        0.0 if c == CPU else table.h2d(b, i) + table.d2h(b, i)
+        for i, c in enumerate(mapping)
+    )
+    ec = EfficientConfiguration(
+        model_name="m", proper_batch_size=b,
+        layer_labels=table.layer_labels, layer_configs=mapping,
+        expected_time_per_example=sum(kernels) + sum(boundaries),
+        per_layer_times=tuple(
+            k + bd for k, bd in zip(kernels, boundaries)
+        ),
+        policy="greedy",
+        per_layer_kernel_times=kernels,
+        per_layer_boundary_times=boundaries,
+    )
+    host, device = ec.stage_times()
+    assert host == pytest.approx(kernels[3])
+    # device segment [0..2]: interior layer 1's roundtrip elided,
+    # edge layers 0/2 and singleton segment [4] keep theirs
+    assert device == pytest.approx(
+        kernels[0] + kernels[1] + kernels[2] + kernels[4]
+        + boundaries[0] + boundaries[2] + boundaries[4]
+    )
+    assert host + device < ec.expected_time_per_example
+
+
+def test_pipelined_expected_time_limits():
+    table = _random_split_table(np.random.default_rng(11))
+    ec = map_efficient_configuration(table, policy="dp")
+    host, device = ec.stage_times()
+    assert host + device == pytest.approx(ec.expected_time_per_example)
+    # n=1 degenerates to the serial expectation
+    assert ec.pipelined_expected_time(1) == pytest.approx(
+        ec.expected_time_per_example
+    )
+    # large n approaches the bottleneck-stage rate, and never beats it
+    est = ec.pipelined_expected_time(1000)
+    assert est == pytest.approx(max(host, device), rel=1e-2)
+    assert est >= max(host, device)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_pad_to_minimal_allowed():
+    assert pad_to(3, (1, 2, 4, 8)) == 4
+    assert pad_to(4, (1, 2, 4, 8)) == 4
+    assert pad_to(5, None) == 5
+    with pytest.raises(ValueError):
+        pad_to(0, (1, 2))
+    with pytest.raises(ValueError):
+        pad_to(1, ())                     # empty != unconstrained
+    with pytest.raises(ValueError):
+        MicroBatcher(max_batch=1, allowed_batch_sizes=())
+    with pytest.raises(ValueError):
+        pad_to(9, (1, 2, 4, 8))
+
+
+def test_batcher_waits_then_flushes_partial_batch():
+    clock = FakeClock()
+    mb = MicroBatcher(
+        max_batch=4, max_wait_s=1e-3,
+        allowed_batch_sizes=(1, 2, 4), clock=clock,
+    )
+    xs = [np.full((2, 2), i, np.int32) for i in range(3)]
+    for x in xs:
+        mb.submit(x)
+    assert not mb.ready()                 # partial and young
+    assert mb.next_batch() is None
+    clock.t = 2e-3                        # oldest request ages out
+    assert mb.ready()
+    batch = mb.next_batch()
+    assert batch.n_real == 3
+    assert batch.padded_size == 4         # padded to a profiled size
+    assert np.array_equal(batch.x[:3], np.stack(xs))   # FIFO order
+    assert np.all(batch.x[3:] == 0)       # zero pad rows
+    assert mb.pending() == 0
+
+
+def test_batcher_full_batch_is_immediately_ready():
+    clock = FakeClock()
+    mb = MicroBatcher(max_batch=2, max_wait_s=10.0, clock=clock)
+    r1 = mb.submit(np.zeros(3, np.int32))
+    r2 = mb.submit(np.ones(3, np.int32))
+    assert mb.ready()                     # full despite zero wait
+    batch = mb.next_batch()
+    assert batch.requests == (r1, r2)
+    assert batch.n_real == batch.padded_size == 2
+
+
+def test_batcher_splits_overflow_into_fifo_batches():
+    clock = FakeClock()
+    mb = MicroBatcher(
+        max_batch=4, max_wait_s=0.0,
+        allowed_batch_sizes=(2, 4), clock=clock,
+    )
+    for i in range(6):
+        mb.submit(np.full(1, i, np.int32))
+    batches = mb.drain()
+    assert [b.n_real for b in batches] == [4, 2]
+    assert [b.padded_size for b in batches] == [4, 2]
+    got = [int(r.x[0]) for b in batches for r in b.requests]
+    assert got == list(range(6))
+
+
+def test_batcher_rejects_unprofiled_max_batch():
+    with pytest.raises(ValueError, match="profiled"):
+        MicroBatcher(max_batch=16, allowed_batch_sizes=(1, 2, 4))
+
+
+# ---------------------------------------------------------------------------
+# pipelined execution: bit-exact vs serial, fused, and reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_mapped():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = ProfileTable(
+        m.name, (4,),
+        tuple(f"L{s.idx}:{s.notation}" for s in m.specs),
+        times={4: [
+            {c: 1e-4 for c in CONFIGS}
+            for _ in m.specs
+        ]},
+        kernel_times={4: [
+            {c: 1e-4 for c in CONFIGS} for _ in m.specs
+        ]},
+        h2d_times={4: [1e-5] * len(m.specs)},
+        d2h_times={4: [1e-5] * len(m.specs)},
+    )
+    # canonical mixed split: GEMM layers on device, elementwise on host
+    ec = configuration_from_mapping(table, 4, canonical_mixed_mapping(m))
+    return m, packed, table, ec
+
+
+def test_mixed_mapping_has_multiple_segments(small_mapped):
+    _, _, _, ec = small_mapped
+    segs = ec.segments()
+    assert len(segs) >= 3
+    assert any(s.on_device for s in segs)
+    assert any(not s.on_device for s in segs)
+
+
+def test_pipelined_bit_exact_vs_serial_fused_and_reference(small_mapped):
+    m, packed, _, ec = small_mapped
+    pipe = SegmentPipeline(m, packed, ec)
+    fused = build_mapped_model(m, packed, ec)
+    inputs = [
+        prepare_input_packed(
+            jax.random.uniform(jax.random.PRNGKey(i), (4, 28, 28, 1))
+        )
+        for i in range(5)
+    ]
+    piped = pipe.run_pipelined(inputs)
+    for x, got in zip(inputs, piped):
+        ref = np.asarray(forward_packed(m.specs, packed, x))
+        assert np.array_equal(got, ref)
+        assert np.array_equal(pipe.run_serial(x), ref)
+        assert np.array_equal(np.asarray(fused(x)), ref)
+
+
+def test_pipelined_empty_and_single_stream(small_mapped):
+    m, packed, _, ec = small_mapped
+    pipe = SegmentPipeline(m, packed, ec)
+    assert pipe.run_pipelined([]) == []
+    x = prepare_input_packed(
+        jax.random.uniform(jax.random.PRNGKey(9), (4, 28, 28, 1))
+    )
+    (out,) = pipe.run_pipelined([x])
+    assert np.array_equal(out, pipe.run_serial(x))
+
+
+def test_pipelined_completion_callback_order(small_mapped):
+    m, packed, _, ec = small_mapped
+    pipe = SegmentPipeline(m, packed, ec)
+    inputs = [
+        prepare_input_packed(
+            jax.random.uniform(jax.random.PRNGKey(i), (4, 28, 28, 1))
+        )
+        for i in range(4)
+    ]
+    seen = []
+    outs = pipe.run_pipelined(
+        inputs, on_complete=lambda i, out: seen.append(i)
+    )
+    assert seen == list(range(4))         # micro-batches retire in order
+    assert len(outs) == 4
+
+
+def test_engine_end_to_end_with_padding(small_mapped):
+    m, packed, table, ec = small_mapped
+    clock = FakeClock()
+    engine = ServingEngine(
+        m, packed, ec,
+        allowed_batch_sizes=table.batch_sizes,
+        clock=clock,
+    )
+    assert engine.batcher.max_batch == ec.proper_batch_size == 4
+    x01 = jax.random.uniform(jax.random.PRNGKey(3), (6, 28, 28, 1))
+    xw = np.asarray(prepare_input_packed(x01))
+    reqs = [engine.submit(xw[i]) for i in range(6)]
+    clock.t = 1.0
+    done = engine.step(force=True)        # 6 requests -> batches of 4+2->4
+    assert done == 6 and engine.served == 6
+    ref = np.asarray(
+        forward_packed(m.specs, packed, prepare_input_packed(x01))
+    )
+    for i, r in enumerate(reqs):
+        assert np.array_equal(r.wait(timeout=1.0), ref[i])
+        assert r.latency_s == pytest.approx(1.0)
+    assert engine.step() == 0             # queue drained
+
+
+def test_engine_fails_requests_instead_of_dropping_them(small_mapped):
+    """If execution raises after requests were popped off the queue,
+    waiters must get the error, not hang to TimeoutError."""
+    m, packed, table, ec = small_mapped
+    engine = ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        clock=FakeClock(),
+    )
+    bad = engine.submit(np.zeros((3, 3, 1), np.int32))  # wrong shape
+    with pytest.raises(BaseException):
+        engine.step(force=True)
+    with pytest.raises(BaseException) as err:
+        bad.wait(timeout=0.1)
+    assert not isinstance(err.value, TimeoutError)
+    assert engine.batcher.pending() == 0    # nothing silently requeued
+
+
+def test_engine_uniform_placement_still_serves(small_mapped):
+    """All-device and all-host mappings degenerate to one segment; the
+    pipeline must still be correct (no overlap, same outputs)."""
+    m, packed, table, _ = small_mapped
+    x = prepare_input_packed(
+        jax.random.uniform(jax.random.PRNGKey(5), (4, 28, 28, 1))
+    )
+    ref = np.asarray(forward_packed(m.specs, packed, x))
+    for cfg in (CPU, ASPECT_CONFIGS[-1]):
+        ec = configuration_from_mapping(table, 4, (cfg,) * len(m.specs))
+        assert len(ec.segments()) == 1
+        pipe = SegmentPipeline(m, packed, ec)
+        (out,) = pipe.run_pipelined([x])
+        assert np.array_equal(out, ref)

@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in the project docs.
+
+Scans README.md, EXPERIMENTS.md, and every Markdown file under docs/
+for ``[text](target)`` links; each non-external target (no scheme,
+not a pure #anchor) must resolve to an existing file or directory
+relative to the linking file. Used by the CI docs job and
+tests/test_docs.py.
+
+    python tools/check_docs_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")  # http:, mailto:
+
+
+def doc_files(root: Path) -> list:
+    files = [root / "README.md", root / "EXPERIMENTS.md"]
+    files += sorted((root / "docs").rglob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links(root: Path) -> list:
+    """[(doc, target), ...] for every relative link that does not
+    resolve."""
+    bad = []
+    for doc in doc_files(root):
+        for target in LINK_RE.findall(doc.read_text()):
+            if EXTERNAL_RE.match(target) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not (doc.parent / path).exists():
+                bad.append((doc.relative_to(root), target))
+    return bad
+
+
+def main(argv: list) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path(__file__).parents[1]
+    docs = doc_files(root)
+    missing = [
+        n for n in ("README.md", "EXPERIMENTS.md")
+        if not (root / n).exists()
+    ]
+    if missing:
+        print(f"missing required docs: {missing}")
+        return 1
+    bad = broken_links(root)
+    for doc, target in bad:
+        print(f"{doc}: broken link -> {target}")
+    print(
+        f"checked {len(docs)} docs: "
+        + ("FAIL" if bad else "all relative links resolve")
+    )
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
