@@ -1,0 +1,178 @@
+"""CI bench-smoke: tiny-size benchmark run + regression gate.
+
+Runs ``kernel_bench`` and ``serve_bench`` at CI-sized settings
+(model ``scale=0.25``, batches ``(1, 4)``, one timing repeat), writes
+the results as JSON (the ``BENCH_pr.json`` artifact the CI job
+uploads), and — with ``--check`` — fails when any metric regressed by
+more than the tolerance against a committed baseline
+(``benchmarks/baseline.json``).
+
+Gate semantics:
+
+* a metric regresses when ``pr_us > baseline_us * (1 + tolerance)``;
+  tolerance defaults to 0.25 (25%), override with ``--tolerance`` or
+  the ``BENCH_SMOKE_TOLERANCE`` env var;
+* a metric present in the baseline but missing from the PR run is a
+  failure (coverage loss); new metrics are reported but pass — commit
+  a refreshed baseline (``--write-baseline``) to start gating them;
+* timings are machine-dependent: the gate is meaningful on the
+  homogeneous CI runner pool it was baselined on.  A PR that
+  legitimately shifts numbers (or changes runner class) refreshes the
+  baseline in the same PR.
+
+Usage::
+
+    python -m benchmarks.bench_smoke --out BENCH_pr.json --check
+    python -m benchmarks.bench_smoke --write-baseline   # refresh
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+from pathlib import Path
+
+DEFAULT_TOLERANCE = 0.25
+BASELINE_PATH = Path(__file__).parent / "baseline.json"
+
+# one place defines "tiny": both the PR run and the committed baseline
+# must come from the same settings or the comparison is meaningless
+SMOKE_KWARGS = {
+    "kernel_bench": {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1},
+    "serve_bench": {
+        "scale": 0.25,
+        "batch_sizes": (1, 4),
+        "repeats": 1,
+        "n_microbatches": 4,
+        "profile_repeats": 1,
+    },
+}
+
+
+def collect() -> dict:
+    """{metric_name: {"us": float, "derived": str}} over both suites."""
+    from benchmarks import kernel_bench, serve_bench
+
+    metrics: dict = {}
+    for name, fn in (
+        ("kernel_bench", kernel_bench.run),
+        ("serve_bench", serve_bench.run),
+    ):
+        for rname, us, derived in fn(**SMOKE_KWARGS[name]):
+            metrics[rname] = {"us": round(float(us), 3), "derived": derived}
+    return metrics
+
+
+def payload(metrics: dict) -> dict:
+    return {
+        "schema": 1,
+        "settings": {
+            k: {kk: list(v) if isinstance(v, tuple) else v
+                for kk, v in kw.items()}
+            for k, kw in SMOKE_KWARGS.items()
+        },
+        "host": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+        "metrics": metrics,
+    }
+
+
+def gate(pr_doc: dict, base_doc: dict, tolerance: float) -> tuple:
+    """(failures, notes) for a full PR payload vs a baseline payload.
+
+    Refuses to compare timings measured under different workload
+    settings — a changed ``SMOKE_KWARGS`` without a baseline refresh
+    would otherwise gate apples against oranges (inflated failures, or
+    masked regressions).
+    """
+    if pr_doc.get("settings") != base_doc.get("settings"):
+        return (
+            [
+                "bench settings changed vs baseline "
+                f"(baseline: {base_doc.get('settings')}, PR: "
+                f"{pr_doc.get('settings')}); refresh the baseline "
+                "(--write-baseline) in this PR"
+            ],
+            [],
+        )
+    return compare(
+        pr_doc.get("metrics", {}), base_doc.get("metrics", {}), tolerance
+    )
+
+
+def compare(pr: dict, baseline: dict, tolerance: float) -> tuple:
+    """(failures, notes) comparing metric dicts name -> {"us": ...}."""
+    failures, notes = [], []
+    for name, base in sorted(baseline.items()):
+        got = pr.get(name)
+        if got is None:
+            failures.append(f"{name}: in baseline but missing from PR run")
+            continue
+        base_us, pr_us = base["us"], got["us"]
+        ratio = pr_us / base_us if base_us > 0 else float("inf")
+        line = f"{name}: {base_us:.1f}us -> {pr_us:.1f}us ({ratio:.2f}x)"
+        if base_us > 0 and pr_us > base_us * (1.0 + tolerance):
+            failures.append(
+                f"{line} exceeds +{tolerance:.0%} tolerance"
+            )
+        else:
+            notes.append(line)
+    for name in sorted(set(pr) - set(baseline)):
+        notes.append(f"{name}: new metric (not gated; refresh baseline)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the PR run JSON here (e.g. BENCH_pr.json)")
+    ap.add_argument("--baseline", type=Path, default=BASELINE_PATH)
+    ap.add_argument("--check", action="store_true",
+                    help="fail on regression vs the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh the committed baseline from this run")
+    ap.add_argument(
+        "--tolerance", type=float,
+        default=float(os.environ.get("BENCH_SMOKE_TOLERANCE",
+                                     DEFAULT_TOLERANCE)),
+        help="allowed relative regression (default 0.25 = 25%%)")
+    args = ap.parse_args(argv)
+
+    metrics = collect()
+    doc = payload(metrics)
+    if args.out is not None:
+        args.out.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"wrote {args.out} ({len(metrics)} metrics)")
+    if args.write_baseline:
+        args.baseline.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"refreshed baseline {args.baseline}")
+        return 0
+    if not args.check:
+        for name, m in sorted(metrics.items()):
+            print(f"{name},{m['us']:.2f},{m['derived']}")
+        return 0
+
+    if not args.baseline.exists():
+        print(f"no baseline at {args.baseline}; "
+              "run --write-baseline and commit it")
+        return 1
+    base_doc = json.loads(args.baseline.read_text())
+    failures, notes = gate(doc, base_doc, args.tolerance)
+    for line in notes:
+        print(f"ok   {line}")
+    for line in failures:
+        print(f"FAIL {line}")
+    print(
+        f"bench-smoke: {len(notes)} ok, {len(failures)} regressed "
+        f"(tolerance +{args.tolerance:.0%})"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,8 +27,8 @@ def run(scale: float = 0.5, batch_sizes=(1, 4, 16), repeats: int = 2):
         for ec in (ec_greedy, ec_dp):
             # Table IV/V row: per-layer chosen configs
             mapping = " ".join(
-                f"{l.split(':')[1]}={c}"
-                for l, c in zip(ec.layer_labels, ec.layer_configs)
+                f"{label.split(':')[1]}={c}"
+                for label, c in zip(ec.layer_labels, ec.layer_configs)
             )
             print(f"# TableIV/V {name} [{ec.policy}]: {mapping}")
         rows.append(

@@ -1,6 +1,13 @@
-"""xnor/popcount kernel micro-benchmarks: measured XLA-variant times on
-the host platform for paper-sized layers (the framework's compute
-substrate)."""
+"""xnor/popcount kernel micro-benchmarks, plus the autotune headline:
+end-to-end expected time of the DP mapping over the **open** registry
+space vs the paper's fixed-8 space, on the same measured profile.
+
+The micro rows time individual variants on paper-sized GEMM shapes;
+the ``kernel/autotune/...`` rows profile a whole model through
+``autotune_bnn_model`` (registry sweep with warm-up pruning) and map
+it twice — full space vs ``configs=CONFIGS`` — so ``vs_fixed8`` is an
+apples-to-apples report of what widening the config space buys.
+"""
 
 from __future__ import annotations
 
@@ -9,6 +16,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.mapper import map_efficient_configuration
+from repro.core.parallel_config import CONFIGS
+from repro.core.profiler import autotune_bnn_model
 from repro.kernels.ops import xnor_gemm
 
 # (label, B, P, Kw, N): CIFAR C256 block + FC
@@ -28,7 +40,7 @@ def _bench(fn, n=3):
     return best
 
 
-def run():
+def _micro_rows():
     rows = []
     key = jax.random.PRNGKey(0)
     for label, b, p, kw, n in CASES:
@@ -47,3 +59,39 @@ def run():
                  f"vs_ref={t_ref / t:.2f}x")
             )
     return rows
+
+
+def _autotune_rows(scale, batch_sizes, repeats):
+    rows = []
+    m = build_model("fashion_mnist", scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=batch_sizes, repeats=repeats
+    )
+    dp_full = map_efficient_configuration(table, policy="dp")
+    dp_fixed = map_efficient_configuration(
+        table, policy="dp", configs=CONFIGS
+    )
+    t_full = dp_full.expected_time_per_example
+    t_fixed = dp_fixed.expected_time_per_example
+    extended = sorted(
+        {c for c in dp_full.layer_configs if c not in CONFIGS}
+    )
+    space = sum(len(cs) for cs in dp_full.config_space)
+    rows.append(
+        (f"kernel/autotune/{m.name}/fixed8_dp@b"
+         f"{dp_fixed.proper_batch_size}",
+         t_fixed * 1e6, f"space={8 * len(m.specs)}")
+    )
+    rows.append(
+        (f"kernel/autotune/{m.name}/autotuned_dp@b"
+         f"{dp_full.proper_batch_size}",
+         t_full * 1e6,
+         f"vs_fixed8={t_fixed / t_full:.2f}x;space={space};"
+         f"extended_picks={','.join(extended) if extended else 'none'}")
+    )
+    return rows
+
+
+def run(scale: float = 0.5, batch_sizes=(1, 8), repeats: int = 2):
+    return _micro_rows() + _autotune_rows(scale, batch_sizes, repeats)

@@ -6,11 +6,16 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   efficient_configs  -> Tables IV/V (mappings) + Table VI (min times),
                         DP vs greedy vs uniform baselines side by side
   batch_sweep        -> Fig. 5 (+ Fig. 1 CPU-vs-parallel gap)
-  kernel_bench       -> §II-C compute substrate micro-bench
+  kernel_bench       -> §II-C compute substrate micro-bench, plus the
+                        autotuned (open registry space) vs fixed-8
+                        end-to-end DP expected-time comparison
   roofline           -> EXPERIMENTS.md §Roofline (reads results/dryrun)
   serve_bench        -> beyond-paper: segment-pipelined vs serial
                         serving (EfficientConfiguration.segments() ->
                         repro.serving), throughput + p50/p99
+
+The CI regression gate over the tiny-size variants of kernel_bench and
+serve_bench lives in ``benchmarks/bench_smoke.py``.
 """
 
 from __future__ import annotations
@@ -25,9 +30,14 @@ def main() -> None:
         roofline, serve_bench,
     )
 
+    from benchmarks.bench_smoke import SMOKE_KWARGS
+
     quick = "--quick" in sys.argv
     suites = [
-        ("kernel_bench", kernel_bench.run, {}),
+        # --quick reuses the bench-smoke gate's tiny settings so CI and
+        # local quick runs measure the same workload
+        ("kernel_bench", kernel_bench.run,
+         SMOKE_KWARGS["kernel_bench"] if quick else {}),
         ("roofline", roofline.run, {}),
         ("efficient_configs", efficient_configs.run,
          {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1}
@@ -39,9 +49,7 @@ def main() -> None:
          {"scale": 0.25, "batch_sizes": (1,), "repeats": 1}
          if quick else {}),
         ("serve_bench", serve_bench.run,
-         {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1,
-          "n_microbatches": 4, "profile_repeats": 1}
-         if quick else {}),
+         SMOKE_KWARGS["serve_bench"] if quick else {}),
     ]
     print("name,us_per_call,derived")
     for name, fn, kwargs in suites:

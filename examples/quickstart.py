@@ -59,11 +59,11 @@ def main():
     ec_greedy = map_efficient_configuration(table, policy="greedy")
     ec = map_efficient_configuration(table, policy="dp")
     print(f"proper batch size: {ec.proper_batch_size}")
-    for l, c, k, b in zip(
+    for label, c, k, b in zip(
         ec.layer_labels, ec.layer_configs,
         ec.per_layer_kernel_times, ec.per_layer_boundary_times,
     ):
-        print(f"  {l:12s} -> {c:4s} kernel {k*1e6:7.1f}us "
+        print(f"  {label:12s} -> {c:4s} kernel {k*1e6:7.1f}us "
               f"boundary {b*1e6:7.1f}us")
     _, t_xyz = best_uniform(table, "XYZ")
     print(

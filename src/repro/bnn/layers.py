@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.bnn.binarize import (
     binarize,
     binarize_ste,
     pack_bits,
-    packed_len,
     popcount,
 )
 

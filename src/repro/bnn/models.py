@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.bnn import layers as L
-from repro.bnn.binarize import np_pack_bits, pack_bits, packed_len
+from repro.bnn.binarize import np_pack_bits, pack_bits
 from repro.bnn.fold_bn import fold_bn
 
 # Table II — FashionMNIST BNN (10 layers)

@@ -1,9 +1,13 @@
 """HEP-BNN core — the paper's primary contribution.
 
-* :mod:`parallel_config` — the 8-way per-layer implementation space
-  (CPU + 7 parallel configurations built from the X/Y/Z aspects).
+* :mod:`parallel_config` — the per-layer implementation space: the
+  paper's fixed 8 (CPU + 7 X/Y/Z aspect configurations) plus any name
+  registered in the open kernel-variant registry
+  (:mod:`repro.kernels.registry`).
 * :mod:`profiler` — per-layer latency profiling across implementations
-  and batch sizes, including host<->device boundary costs.
+  and batch sizes, including host<->device boundary costs; the
+  registry-driven ``autotune_bnn_model`` sweep produces variable-size
+  per-layer config spaces with warm-up pruning.
 * :mod:`mapper` — layer-to-implementation mapping: the paper's greedy
   Algorithm 1 (``policy="greedy"``) and the transfer-aware Viterbi DP
   (``policy="dp"``) -> EfficientConfiguration, whose ``segments()``
@@ -20,13 +24,23 @@
   roofline costs.
 """
 
-from repro.core.parallel_config import CONFIGS, ASPECT_CONFIGS, aspects_of
+from repro.core.parallel_config import (
+    CONFIGS,
+    ASPECT_CONFIGS,
+    aspects_of,
+    is_host_config,
+)
 from repro.core.mapper import (
     EfficientConfiguration,
     Segment,
+    configuration_from_mapping,
     map_efficient_configuration,
     segments_of,
     uniform_total,
 )
-from repro.core.profiler import profile_bnn_model, ProfileTable
+from repro.core.profiler import (
+    ProfileTable,
+    autotune_bnn_model,
+    profile_bnn_model,
+)
 from repro.core.mapped_model import build_mapped_model, build_segment_fns

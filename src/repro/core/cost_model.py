@@ -20,7 +20,7 @@ import dataclasses
 import math
 
 from repro.bnn.layers import LayerSpec
-from repro.core.parallel_config import CPU, aspects_of
+from repro.core.parallel_config import CONFIGS, CPU, aspects_of
 
 # --- TPU v5e hardware constants (per chip) --------------------------------
 PEAK_BF16_FLOPS = 197e12          # MXU
@@ -78,14 +78,42 @@ def gemm_dims_for(spec: LayerSpec, batch: int) -> GemmDims | None:
     return None
 
 
-def _grid(dims: GemmDims, config: str):
+def variant_analytics(config: str, registry=None) -> tuple:
+    """(p_blk, n_blk, kind) pricing metadata for `config`.
+
+    Fixed-8 names price under the model-default blocks; registered
+    kernel variants (``repro.kernels.registry``) carry their own tile
+    sizes and traffic kind (``"tiled"`` loop-nest reuse, ``"fused"``
+    single pass, ``"host"`` CPU-side).  `registry` overrides the
+    default registry for custom profiling sweeps.
+    """
+    if config == CPU:
+        return P_BLK, N_BLK, "host"
+    if config in CONFIGS:
+        return P_BLK, N_BLK, "tiled"
+    if registry is None:
+        from repro.kernels.registry import DEFAULT_REGISTRY
+
+        registry = DEFAULT_REGISTRY
+    v = registry.get(config)
+    return v.p_blk or P_BLK, v.n_blk or N_BLK, v.analytic
+
+
+def _aspects_of(config: str, registry=None) -> tuple:
+    if registry is not None and config not in CONFIGS and config in registry:
+        return tuple(registry.get(config).aspects)
+    return aspects_of(config)
+
+
+def _grid(dims: GemmDims, config: str, registry=None):
     """(ordered axis names, sizes, parallel flags) as the kernel builds
-    them: aspects outermost."""
-    aspects = set(aspects_of(config))
+    them: aspects outermost; block sizes from the variant's metadata."""
+    aspects = set(_aspects_of(config, registry))
+    p_blk, n_blk, _ = variant_analytics(config, registry)
     sizes = {
         "X": dims.b,
-        "Y": math.ceil(dims.p / min(P_BLK, dims.p)),
-        "Z": math.ceil(dims.n / min(N_BLK, dims.n)),
+        "Y": math.ceil(dims.p / min(p_blk, dims.p)),
+        "Z": math.ceil(dims.n / min(n_blk, dims.n)),
     }
     order = [a for a in ("X", "Y", "Z") if a in aspects] + [
         a for a in ("X", "Y", "Z") if a not in aspects
@@ -93,10 +121,11 @@ def _grid(dims: GemmDims, config: str):
     return order, sizes, aspects
 
 
-def gemm_hbm_traffic(dims: GemmDims, config: str) -> float:
+def gemm_hbm_traffic(dims: GemmDims, config: str, registry=None) -> float:
     """Bytes moved HBM<->VMEM under the loop-nest reuse model."""
-    order, sizes, _ = _grid(dims, config)
-    p_blk, n_blk = min(P_BLK, dims.p), min(N_BLK, dims.n)
+    order, sizes, _ = _grid(dims, config, registry)
+    blk_p, blk_n, _ = variant_analytics(config, registry)
+    p_blk, n_blk = min(blk_p, dims.p), min(blk_n, dims.n)
     deps = {"a": {"X", "Y"}, "w": {"Z"}, "o": {"X", "Y", "Z"}}
     block_bytes = {
         "a": p_blk * dims.kw * 4,
@@ -113,23 +142,29 @@ def gemm_hbm_traffic(dims: GemmDims, config: str) -> float:
     return total
 
 
-def gemm_kernel_time_tpu(dims: GemmDims, config: str) -> float:
+def gemm_kernel_time_tpu(dims: GemmDims, config: str, registry=None) -> float:
     """Kernel-only seconds for one xnor-GEMM dispatch under `config` —
     no host<->device transfer term.
 
     compute and memory terms overlap (max), parallel aspect dims spread
     over TENSOR_CORES, sequential dims serialize dispatch-free.
     """
-    if config == CPU:
+    _, _, kind = variant_analytics(config, registry)
+    if kind == "host":
         bytes_ = dims.a_bytes + dims.w_bytes + dims.o_bytes
         return max(bytes_ / CPU_BW, dims.vpu_ops / CPU_INT_OPS)
-    order, sizes, aspects = _grid(dims, config)
+    order, sizes, aspects = _grid(dims, config, registry)
     par = 1
     for a in aspects:
         par *= sizes[a]
     core_par = min(TENSOR_CORES, max(par, 1))
     compute = dims.vpu_ops / (VPU_INT_OPS * core_par)
-    memory = gemm_hbm_traffic(dims, config) / HBM_BW
+    if kind == "fused":
+        # single fused dispatch: each operand crosses HBM exactly once
+        traffic = dims.a_bytes + dims.w_bytes + dims.o_bytes
+    else:
+        traffic = gemm_hbm_traffic(dims, config, registry)
+    memory = traffic / HBM_BW
     return max(compute, memory) + DISPATCH_OVERHEAD
 
 
@@ -140,10 +175,16 @@ def gemm_transfer_times_tpu(dims: GemmDims) -> tuple:
     return h2d, d2h
 
 
-def _split(kernel: float, transfers: tuple, config: str) -> tuple:
-    """The single placement-charging rule: host placement (CPU) has no
+def _is_host(config: str, registry=None) -> bool:
+    from repro.core.parallel_config import is_host_config
+
+    return is_host_config(config, registry)
+
+
+def _split(kernel: float, transfers: tuple, config: str, registry=None) -> tuple:
+    """The single placement-charging rule: host placements have no
     boundary cost, device placements carry the layer's (h2d, d2h)."""
-    if config == CPU:
+    if _is_host(config, registry):
         return kernel, 0.0, 0.0
     h2d, d2h = transfers
     return kernel, h2d, d2h
@@ -162,14 +203,14 @@ def gemm_time_tpu(dims: GemmDims, config: str) -> float:
 
 
 def elementwise_kernel_time_tpu(
-    spec: LayerSpec, config: str, batch: int
+    spec: LayerSpec, config: str, batch: int, registry=None
 ) -> float:
     """mp / step / flat layers: pure memory-bound, kernel term only."""
     import numpy as np
 
     elems = batch * int(np.prod(spec.in_shape))
     bytes_ = elems * 4 * 2
-    if config == CPU:
+    if _is_host(config, registry):
         return bytes_ / CPU_BW
     return bytes_ / HBM_BW + DISPATCH_OVERHEAD
 
@@ -195,7 +236,7 @@ def elementwise_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
 
 
 def layer_time_split_tpu(
-    spec: LayerSpec, config: str, batch: int
+    spec: LayerSpec, config: str, batch: int, registry=None
 ) -> tuple:
     """(kernel_s, h2d_s, d2h_s) for one layer at `batch`.
 
@@ -207,14 +248,16 @@ def layer_time_split_tpu(
     dims = gemm_dims_for(spec, batch)
     if dims is None:
         return _split(
-            elementwise_kernel_time_tpu(spec, config, batch),
+            elementwise_kernel_time_tpu(spec, config, batch, registry),
             elementwise_transfer_times_tpu(spec, batch),
             config,
+            registry,
         )
     return _split(
-        gemm_kernel_time_tpu(dims, config),
+        gemm_kernel_time_tpu(dims, config, registry),
         gemm_transfer_times_tpu(dims),
         config,
+        registry,
     )
 
 

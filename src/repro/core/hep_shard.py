@@ -22,7 +22,6 @@ HBM (a config that does not fit is not a config, it is an OOM).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Callable, Optional
 
 from repro.parallel.sharding import ShardScheme

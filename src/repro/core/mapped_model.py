@@ -38,38 +38,33 @@ import numpy as np
 from repro.bnn import layers as L
 from repro.bnn.models import BNNModel
 from repro.core.mapper import EfficientConfiguration
-from repro.core.parallel_config import CPU, aspects_of
-from repro.kernels.ref import xnor_gemm_ref
-from repro.kernels.variants import xnor_gemm_variant
+from repro.core.parallel_config import is_host_config
+from repro.kernels.registry import DEFAULT_REGISTRY
 
 
-def _layer_fn(spec, packed, config: str) -> Callable:
-    aspects = frozenset(aspects_of(config))
+def _layer_fn(spec, packed, config: str, registry=None) -> Callable:
+    """The layer's computation under `config`, resolved through the
+    kernel-variant registry — any registered name (fixed-8 aspect
+    config, ``xla_fused``, a Pallas tile variant, ...) is executable.
+    `registry` overrides the default resolver (matching a custom
+    registry passed to ``autotune_bnn_model``)."""
+    reg = registry if registry is not None else DEFAULT_REGISTRY
     if spec.kind == "conv":
         w, k_true = packed["w_words"], packed["k_true"]
+        builder = reg.get(config).builder
 
         def f(x):
             b, h, ww, _ = x.shape
             p = L.extract_patch_words(x).reshape(b, h * ww, -1)
-            o = (
-                xnor_gemm_ref(p, w, k_true)
-                if config == CPU
-                else xnor_gemm_variant(p, w, k_true, aspects)
-            )
-            return o.reshape(b, h, ww, -1)
+            return builder(p, w, k_true).reshape(b, h, ww, -1)
 
         return f
     if spec.kind == "fc":
         w, k_true = packed["w_words"], packed["k_true"]
+        builder = reg.get(config).builder
 
         def f(x):
-            p = x[:, None, :]
-            o = (
-                xnor_gemm_ref(p, w, k_true)
-                if config == CPU
-                else xnor_gemm_variant(p, w, k_true, aspects)
-            )
-            return o[:, 0, :]
+            return builder(x[:, None, :], w, k_true)[:, 0, :]
 
         return f
     if spec.kind == "mp":
@@ -84,12 +79,15 @@ def _layer_fn(spec, packed, config: str) -> Callable:
 
 
 def _layer_fns(
-    model: BNNModel, packed_params: list, config: EfficientConfiguration
+    model: BNNModel,
+    packed_params: list,
+    config: EfficientConfiguration,
+    registry=None,
 ) -> list:
     """Per-layer callables under the mapping — the single source both
     the whole-model drivers and the segment builder compose from."""
     return [
-        _layer_fn(spec, packed, cfg)
+        _layer_fn(spec, packed, cfg, registry)
         for spec, packed, cfg in zip(
             model.specs, packed_params, config.layer_configs
         )
@@ -103,6 +101,7 @@ def build_mapped_model(
     *,
     fused: bool = True,
     elide_transfers: bool | None = None,
+    registry=None,
 ) -> Callable:
     """Returns fn(packed_input_words) -> int32 class scores, executing
     each layer with its mapped implementation.
@@ -113,7 +112,7 @@ def build_mapped_model(
     every non-CPU layer (paper §IV-A).  ``None`` follows the mapping
     policy — DP configurations were priced under elision.
     """
-    fns = _layer_fns(model, packed_params, config)
+    fns = _layer_fns(model, packed_params, config, registry)
 
     if fused:
         @jax.jit
@@ -137,13 +136,17 @@ def build_mapped_model(
             xd = jnp.asarray(x)
             out = f(xd)
             jax.block_until_ready(out)
-            if cfg == CPU:
+            if is_host_config(cfg, registry):
                 x = out
-            elif elide_transfers and i + 1 < len(cfgs) and cfgs[i + 1] != CPU:
+            elif (
+                elide_transfers
+                and i + 1 < len(cfgs)
+                and not is_host_config(cfgs[i + 1], registry)
+            ):
                 # co-placed successor: stay resident on the device
                 x = out
             else:
-                # non-CPU layers round-trip through the host (§IV-A)
+                # device layers round-trip through the host (§IV-A)
                 x = np.asarray(out)
         return np.asarray(x)
 
@@ -154,6 +157,7 @@ def build_segment_fns(
     model: BNNModel,
     packed_params: list,
     config: EfficientConfiguration,
+    registry=None,
 ) -> list:
     """One jitted callable per segment of `config`, in execution order.
 
@@ -163,7 +167,7 @@ def build_segment_fns(
     elision the DP mapper priced.  All arithmetic is integer/bool, so
     composition is bit-exact versus per-layer execution.
     """
-    fns = _layer_fns(model, packed_params, config)
+    fns = _layer_fns(model, packed_params, config, registry)
 
     def segment_fn(seg):
         seg_fns = fns[seg.start : seg.stop]

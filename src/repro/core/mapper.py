@@ -12,7 +12,8 @@ paper's execution model where "data transfer between CPU and GPU takes
 place before and after every layer's execution" (§IV-A).
 
 ``policy="dp"`` — transfer-aware dynamic program (Viterbi over
-layers x 8 configs, run per batch size) pricing the **fused** executor
+layers x per-layer candidate sets, run per batch size) pricing the
+**fused** executor
 (``mapped_model.build_mapped_model``), which elides host<->device
 roundtrips between co-placed layers — the optimization the paper names
 as future work.  Recurrence, with ``place(c) in {host, device}``
@@ -43,7 +44,7 @@ import dataclasses
 import json
 from typing import Sequence
 
-from repro.core.parallel_config import CPU, CONFIGS, validate
+from repro.core.parallel_config import is_host_config, validate
 from repro.core.profiler import ProfileTable
 
 POLICIES = ("greedy", "dp")
@@ -76,8 +77,29 @@ class Segment:
 
 
 def placement_of(config: str) -> str:
-    """CPU is host-placed; every aspect config runs on the device."""
-    return HOST if config == CPU else DEVICE
+    """CPU (and any registered host variant) is host-placed; every
+    other config — aspect or registered device variant — runs on the
+    device."""
+    return HOST if is_host_config(config) else DEVICE
+
+
+def _candidates_for(
+    table: ProfileTable, batch: int, layer: int, configs
+) -> tuple:
+    """The configs a policy may choose for (batch, layer): the table
+    row's own (variable-size) space, optionally restricted to
+    `configs`.  Restriction silently drops names the row lacks (e.g.
+    autotune-pruned variants) but never yields an empty space."""
+    row = table.configs_for(batch, layer)
+    if configs is None:
+        return row
+    cand = tuple(c for c in configs if c in set(row))
+    if not cand:
+        raise ValueError(
+            f"none of {tuple(configs)} profiled for layer {layer} "
+            f"at batch {batch} (row has {row})"
+        )
+    return cand
 
 
 def segments_of(layer_configs: Sequence[str]) -> tuple:
@@ -119,6 +141,10 @@ class EfficientConfiguration:
     # non-CPU layer for greedy, placement-change edges only for dp)
     per_layer_kernel_times: tuple = ()
     per_layer_boundary_times: tuple = ()
+    # the searchable space the mapping was chosen from: one tuple of
+    # candidate variant names per layer, variable-size per layer for
+    # autotuned tables.  () on legacy configurations (fixed-8 implied).
+    config_space: tuple = ()
 
     def segments(self) -> tuple:
         """Maximal same-placement layer runs (:func:`segments_of`) —
@@ -178,10 +204,10 @@ class EfficientConfiguration:
 
     def to_json(self) -> str:
         layers = []
-        for i, (l, c, t) in enumerate(
+        for i, (label, c, t) in enumerate(
             zip(self.layer_labels, self.layer_configs, self.per_layer_times)
         ):
-            entry = {"layer": l, "config": c, "time_per_example": t}
+            entry = {"layer": label, "config": c, "time_per_example": t}
             if self.per_layer_kernel_times:
                 entry["kernel_time_per_example"] = (
                     self.per_layer_kernel_times[i]
@@ -189,6 +215,8 @@ class EfficientConfiguration:
                 entry["boundary_time_per_example"] = (
                     self.per_layer_boundary_times[i]
                 )
+            if self.config_space:
+                entry["candidates"] = list(self.config_space[i])
             layers.append(entry)
         return json.dumps(
             {
@@ -204,10 +232,12 @@ class EfficientConfiguration:
     @staticmethod
     def from_json(s: str) -> "EfficientConfiguration":
         """Inverse of :meth:`to_json`; tolerates legacy JSON written
-        before the policy and kernel/boundary fields existed."""
+        before the policy, kernel/boundary, and variable-size
+        config-space (``candidates``) fields existed."""
         d = json.loads(s)
         layers = d["layers"]
         has_split = layers and "kernel_time_per_example" in layers[0]
+        has_space = layers and "candidates" in layers[0]
         return EfficientConfiguration(
             model_name=d["model"],
             proper_batch_size=d["proper_batch_size"],
@@ -224,20 +254,25 @@ class EfficientConfiguration:
             per_layer_boundary_times=tuple(
                 x["boundary_time_per_example"] for x in layers
             ) if has_split else (),
+            config_space=tuple(
+                tuple(x["candidates"]) for x in layers
+            ) if has_space else (),
         )
 
 
 def _greedy_for_batch(
-    table: ProfileTable, batch: int, configs: Sequence[str]
+    table: ProfileTable, batch: int, configs
 ) -> tuple:
-    """Algorithm 1 inner loop: (total, mapping)."""
+    """Algorithm 1 inner loop: (total, mapping).  The per-layer
+    implementation space is the table row's own — variable-size for
+    autotuned tables."""
     total = 0.0                         # line 4
     mapping = []
     for layer_idx in range(len(table.layer_labels)):  # line 5
         row = table.times[batch][layer_idx]
         min_time = float("inf")         # line 6
         chosen = None
-        for impl in configs:            # line 7
+        for impl in _candidates_for(table, batch, layer_idx, configs):
             t = row[impl]               # lines 8-9 (profiled)
             if t < min_time:            # line 11
                 min_time = t
@@ -248,33 +283,37 @@ def _greedy_for_batch(
 
 
 def _dp_for_batch(
-    table: ProfileTable, batch: int, configs: Sequence[str]
+    table: ProfileTable, batch: int, configs
 ) -> tuple:
-    """Viterbi over layers x configs under the fused cost model.
+    """Viterbi over layers x per-layer candidate sets under the fused
+    cost model — the candidate sets may differ in size per layer
+    (autotuned tables).
 
     Returns (total, mapping); per-layer attribution is derived from the
     mapping afterwards so kernel and edge charges stay auditable.
     """
     n_layers = len(table.layer_labels)
+    cands0 = _candidates_for(table, batch, 0, configs)
     # dp cost of a prefix ending with layer i mapped to config c, the
     # activation resident at place(c); back[i][c] = best predecessor
     prev = {
         c: table.kernel_time(batch, 0, c)
-        + (table.h2d(batch, 0) if c != CPU else 0.0)
-        for c in configs
+        + (0.0 if is_host_config(c) else table.h2d(batch, 0))
+        for c in cands0
     }
-    back: list = [{c: None for c in configs}]
+    back: list = [{c: None for c in cands0}]
     for i in range(1, n_layers):
         cur, bk = {}, {}
         d2h_prev = table.d2h(batch, i - 1)
         h2d_here = table.h2d(batch, i)
-        for c in configs:
+        for c in _candidates_for(table, batch, i, configs):
+            dev = not is_host_config(c)
             kern = table.kernel_time(batch, i, c)
             best_cost, best_prev = float("inf"), None
             for cp, pcost in prev.items():
-                if (cp != CPU) == (c != CPU):
+                if (not is_host_config(cp)) == dev:
                     edge = 0.0
-                elif c != CPU:          # host -> device: upload operand
+                elif dev:               # host -> device: upload operand
                     edge = h2d_here
                 else:                   # device -> host: download result
                     edge = d2h_prev
@@ -288,7 +327,8 @@ def _dp_for_batch(
     # the network's output must land back on the host
     total, last = float("inf"), None
     for c, cost in prev.items():
-        cost += table.d2h(batch, n_layers - 1) if c != CPU else 0.0
+        if not is_host_config(c):
+            cost += table.d2h(batch, n_layers - 1)
         if cost < total:
             total, last = cost, c
     mapping = [last]
@@ -309,9 +349,9 @@ def attribute_fused_costs(
     for i, c in enumerate(mapping):
         kernels.append(table.kernel_time(batch, i, c))
         b = 0.0
-        if c != CPU:
-            entered = i == 0 or mapping[i - 1] == CPU
-            left = i == n_layers - 1 or mapping[i + 1] == CPU
+        if not is_host_config(c):
+            entered = i == 0 or is_host_config(mapping[i - 1])
+            left = i == n_layers - 1 or is_host_config(mapping[i + 1])
             if entered:
                 b += table.h2d(batch, i)
             if left:
@@ -323,7 +363,7 @@ def attribute_fused_costs(
 def map_efficient_configuration(
     table: ProfileTable,
     *,
-    configs: Sequence[str] = CONFIGS,
+    configs: Sequence[str] | None = None,
     policy: str = "greedy",
 ) -> EfficientConfiguration:
     """Map every layer to an implementation and pick the proper batch.
@@ -331,6 +371,13 @@ def map_efficient_configuration(
     ``policy="greedy"`` is Algorithm 1 lines 1-27; ``policy="dp"`` is
     the transfer-aware Viterbi (module docstring).  Both sweep all
     profiled batch sizes and return the best.
+
+    ``configs=None`` (default) searches each layer's full profiled
+    space — the table row's own, variable-size keys, so autotuned
+    tables are searched in their entirety.  Passing an explicit list
+    restricts the search (e.g. ``configs=CONFIGS`` prices the paper's
+    fixed-8 space on an autotuned table for apples-to-apples
+    comparison).
     """
     if policy not in POLICIES:
         raise ValueError(
@@ -377,6 +424,10 @@ def map_efficient_configuration(
         policy=policy,
         per_layer_kernel_times=kernels,
         per_layer_boundary_times=boundaries,
+        config_space=tuple(
+            _candidates_for(table, proper_batch, i, configs)
+            for i in range(len(table.layer_labels))
+        ),
     )
 
 

@@ -1,7 +1,20 @@
-"""Per-layer latency profiling (paper §III-A, Fig. 4).
+"""Per-layer latency profiling (paper §III-A, Fig. 4) and the
+registry-driven autotune pass.
 
-For every batch size and every layer, time all 8 implementations:
-``CPU`` (host-resident, no boundary cost) and the 7 aspect configs.
+Two entry points, one ``ProfileTable`` output:
+
+* :func:`profile_bnn_model` — the paper's sweep: for every batch size
+  and every layer, time a **fixed** candidate list (default: ``CPU`` +
+  the 7 aspect configs).
+* :func:`autotune_bnn_model` — the open-space sweep: per-layer
+  candidates come from the kernel-variant registry
+  (:mod:`repro.kernels.registry`) filtered by each GEMM layer's shape
+  and the host platform, so rows are **variable-size** (and always a
+  superset of the fixed-8 space — the paper's configs carry no
+  applicability predicate).  In measured mode, extended variants get a
+  cheap one-repeat warm-up timing first and are pruned (skipped for
+  the full ``repeats`` sweep) when dominated by ``prune_factor`` x the
+  best warm-up so far; the fixed-8 names are never pruned.
 
 **Kernel/boundary time model.**  Each profiled entry is split into two
 independently-stored components:
@@ -11,7 +24,7 @@ independently-stored components:
   (H2D) and result (D2H), measured/modeled **separately** per
   direction and stored per layer in ``h2d_times`` / ``d2h_times``.
 
-The paper-faithful total (``times``) charges non-CPU layers
+The paper-faithful total (``times``) charges device-placed layers
 ``kernel + h2d + d2h`` — §IV-A: "data transfer between CPU and GPU
 takes place before and after every layer's execution".  The split
 exists because the fused executor (``mapped_model.build_mapped_model``
@@ -43,10 +56,8 @@ import numpy as np
 from repro.bnn import layers as L
 from repro.bnn.models import BNNModel, prepare_input_packed
 from repro.core import cost_model as cm
-from repro.core.parallel_config import ASPECT_CONFIGS, CONFIGS, CPU, aspects_of
-from repro.kernels.ops import xnor_gemm
-from repro.kernels.ref import xnor_gemm_ref
-from repro.kernels.variants import xnor_gemm_variant
+from repro.core.parallel_config import CONFIGS, is_host_config
+from repro.kernels.registry import DEFAULT_REGISTRY, GemmShape
 
 
 @dataclasses.dataclass
@@ -55,7 +66,10 @@ class ProfileTable:
     batch_sizes: tuple
     layer_labels: tuple          # e.g. ('L1:C64', 'L2:MP14', ...)
     # times[batch][layer_idx][config] -> seconds per example, paper
-    # semantics: kernel + full per-layer boundary for non-CPU configs
+    # semantics: kernel + full per-layer boundary for device configs.
+    # Rows are dicts keyed by variant name, so per-layer config spaces
+    # may differ in size (autotuned tables) — consumers must iterate
+    # row keys (``configs_for``), never assume the fixed 8.
     times: dict
     # kernel_times[batch][layer_idx][config] -> kernel-only s/example
     kernel_times: dict | None = None
@@ -63,6 +77,11 @@ class ProfileTable:
     # the layer's operand upload / result download (config-independent)
     h2d_times: dict | None = None
     d2h_times: dict | None = None
+
+    def configs_for(self, batch: int, layer: int) -> tuple:
+        """The candidate config names profiled for (batch, layer) —
+        the layer's searchable space, variable-size by design."""
+        return tuple(self.times[batch][layer])
 
     def best_config(self, batch: int, layer: int) -> tuple:
         row = self.times[batch][layer]
@@ -89,7 +108,7 @@ class ProfileTable:
 
     def boundary_time(self, batch: int, layer: int, config: str) -> float:
         """Full per-layer roundtrip charged under paper semantics."""
-        if config == CPU:
+        if is_host_config(config):
             return 0.0
         return self.h2d(batch, layer) + self.d2h(batch, layer)
 
@@ -122,53 +141,72 @@ def _measure_d2h(x_out: jax.Array, repeats: int) -> float:
     return _timeit(lambda: np.asarray(x_out), repeats)
 
 
-def _layer_impls(spec: L.LayerSpec, packed: dict):
-    """Return {config: jitted fn} for one layer, all computing the packed
-    reference semantics."""
+def prune_survivors(
+    warmups: dict, *, never_prune=CONFIGS, prune_factor: float = 3.0
+) -> tuple:
+    """Autotune pruning decision: given one-repeat warm-up timings
+    (name -> seconds), keep every name in `never_prune` plus any
+    variant within ``prune_factor`` x the fastest warm-up.  Dominated
+    extended variants are skipped for the full-repeats sweep (and
+    dropped from the profile row)."""
+    if not warmups:
+        return ()
+    best = min(warmups.values())
+    keep = set(never_prune)
+    return tuple(
+        name
+        for name, t in warmups.items()
+        if name in keep or t <= prune_factor * best
+    )
+
+
+def gemm_shape_of(spec: L.LayerSpec, packed: dict, batch: int):
+    """The GEMM dispatch shape of a conv/fc layer at `batch` (None for
+    elementwise layers) — what variant applicability predicates see."""
+    if spec.kind not in ("conv", "fc"):
+        return None
+    w_words = packed["w_words"]
+    n, kw = int(w_words.shape[0]), int(w_words.shape[1])
     if spec.kind == "conv":
+        h, w, _ = spec.in_shape
+        return GemmShape(b=batch, p=h * w, n=n, kw=kw)
+    return GemmShape(b=batch, p=1, n=n, kw=kw)
+
+
+def _layer_impls(
+    spec: L.LayerSpec, packed: dict, candidates: Sequence[str], registry
+):
+    """Return {config: jitted fn} for one layer, all computing the packed
+    reference semantics.  GEMM layers resolve each candidate name to its
+    registered builder; elementwise layers share one computation (the
+    candidates differ only by the boundary cost the profiler adds — the
+    paper's finding that these layers never win on GPU emerges from
+    measurement, not fiat)."""
+    if spec.kind in ("conv", "fc"):
         w, k_true = packed["w_words"], packed["k_true"]
 
-        def conv_for(cfg):
-            aspects = aspects_of(cfg)
+        def gemm_for(cfg):
+            builder = registry.get(cfg).builder
+            if spec.kind == "conv":
 
-            @jax.jit
-            def f(x):
-                from repro.bnn.layers import extract_patch_words
+                @jax.jit
+                def f(x):
+                    from repro.bnn.layers import extract_patch_words
 
-                b, h, ww, _ = x.shape
-                p = extract_patch_words(x).reshape(b, h * ww, -1)
-                if cfg == CPU:
-                    o = xnor_gemm_ref(p, w, k_true)
-                else:
-                    o = xnor_gemm_variant(p, w, k_true, frozenset(aspects))
-                return o.reshape(b, h, ww, -1)
+                    b, h, ww, _ = x.shape
+                    p = extract_patch_words(x).reshape(b, h * ww, -1)
+                    return builder(p, w, k_true).reshape(b, h, ww, -1)
+
+            else:
+
+                @jax.jit
+                def f(x):
+                    return builder(x[:, None, :], w, k_true)[:, 0, :]
 
             return f
 
-        return {cfg: conv_for(cfg) for cfg in CONFIGS}
+        return {cfg: gemm_for(cfg) for cfg in candidates}
 
-    if spec.kind == "fc":
-        w, k_true = packed["w_words"], packed["k_true"]
-
-        def fc_for(cfg):
-            aspects = aspects_of(cfg)
-
-            @jax.jit
-            def f(x):
-                p = x[:, None, :]
-                if cfg == CPU:
-                    o = xnor_gemm_ref(p, w, k_true)
-                else:
-                    o = xnor_gemm_variant(p, w, k_true, frozenset(aspects))
-                return o[:, 0, :]
-
-            return f
-
-        return {cfg: fc_for(cfg) for cfg in CONFIGS}
-
-    # mp / step / flat: one computation; parallel configs differ only by
-    # the boundary cost the profiler adds (the paper's finding that these
-    # layers never win on GPU emerges from measurement, not fiat)
     if spec.kind == "mp":
         f = jax.jit(L.maxpool_packed)
     elif spec.kind == "step":
@@ -179,7 +217,7 @@ def _layer_impls(spec: L.LayerSpec, packed: dict):
         f = jax.jit(lambda x: L.flat_packed(x, c))
     else:  # pragma: no cover
         raise ValueError(spec.kind)
-    return {cfg: f for cfg in CONFIGS}
+    return {cfg: f for cfg in candidates}
 
 
 def _capture_layer_inputs(
@@ -203,16 +241,68 @@ def _capture_layer_inputs(
     return xs
 
 
-def profile_bnn_model(
+def _analytic_rows(spec, candidates, batch, registry):
+    """(row, krow, h2d, d2h) for one layer from the TPU cost model."""
+    row, krow = {}, {}
+    h2d = d2h = 0.0
+    for cfg in candidates:
+        kern, th2d, td2h = cm.layer_time_split_tpu(
+            spec, cfg, batch, registry=registry
+        )
+        krow[cfg] = kern / batch
+        row[cfg] = (kern + th2d + td2h) / batch
+        if not is_host_config(cfg, registry):
+            h2d, d2h = th2d / batch, td2h / batch
+    return row, krow, h2d, d2h
+
+
+def _measured_rows(
+    spec, packed, candidates, batch, x_in, repeats, prune_factor, registry
+):
+    """(row, krow, h2d, d2h) for one layer by timing real executables.
+
+    With ``prune_factor`` set, every candidate gets a one-repeat warm-up
+    timing first; extended variants dominated by ``prune_factor`` x the
+    best warm-up are dropped before the full-repeats sweep.
+    """
+    impls = _layer_impls(spec, packed, candidates, registry)
+    x_out = impls[candidates[0]](x_in)
+    h2d = _measure_h2d(x_in, repeats) / batch
+    d2h = _measure_d2h(x_out, repeats) / batch
+    warmups = {
+        cfg: _timeit(lambda f=impls[cfg]: f(x_in), 1) for cfg in candidates
+    }
+    if prune_factor is not None:
+        survivors = prune_survivors(
+            warmups, never_prune=CONFIGS, prune_factor=prune_factor
+        )
+    else:
+        survivors = tuple(candidates)
+    row, krow = {}, {}
+    for cfg in survivors:
+        t = warmups[cfg]
+        if repeats > 1:
+            t = min(t, _timeit(lambda f=impls[cfg]: f(x_in), repeats - 1))
+        t /= batch
+        krow[cfg] = t
+        row[cfg] = t if is_host_config(cfg, registry) else t + h2d + d2h
+    return row, krow, h2d, d2h
+
+
+def _profile(
     model: BNNModel,
     packed_params: list,
+    candidates_fn: Callable,
     *,
-    batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128),
-    configs: Sequence[str] = CONFIGS,
-    repeats: int = 3,
-    seed: int = 0,
-    time_source: str = "measured",
+    batch_sizes: Sequence[int],
+    repeats: int,
+    seed: int,
+    time_source: str,
+    prune_factor: float | None,
+    registry=None,
 ) -> ProfileTable:
+    """Shared sweep: ``candidates_fn(spec, packed, batch) -> names``
+    decides each layer's searchable space."""
     labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
     times: dict = {}
     kernel_times: dict = {}
@@ -233,31 +323,17 @@ def profile_bnn_model(
         for spec, packed, x_in in zip(
             model.specs, packed_params, layer_inputs
         ):
+            candidates = tuple(candidates_fn(spec, packed, batch))
             if time_source == "analytic":
-                row, krow = {}, {}
-                h2d = d2h = 0.0
-                for cfg in configs:
-                    kern, th2d, td2h = cm.layer_time_split_tpu(
-                        spec, cfg, batch
-                    )
-                    krow[cfg] = kern / batch
-                    row[cfg] = (kern + th2d + td2h) / batch
-                    if cfg != CPU:
-                        h2d, d2h = th2d / batch, td2h / batch
-                per_layer.append(row)
-                per_layer_kernel.append(krow)
-                per_layer_h2d.append(h2d)
-                per_layer_d2h.append(d2h)
-                continue
-            impls = _layer_impls(spec, packed)
-            x_out = impls[CPU](x_in)
-            h2d = _measure_h2d(x_in, repeats) / batch
-            d2h = _measure_d2h(x_out, repeats) / batch
-            row, krow = {}, {}
-            for cfg in configs:
-                t = _timeit(lambda f=impls[cfg]: f(x_in), repeats) / batch
-                krow[cfg] = t
-                row[cfg] = t if cfg == CPU else t + h2d + d2h
+                row, krow, h2d, d2h = _analytic_rows(
+                    spec, candidates, batch, registry
+                )
+            else:
+                row, krow, h2d, d2h = _measured_rows(
+                    spec, packed, candidates, batch, x_in, repeats,
+                    prune_factor,
+                    registry if registry is not None else DEFAULT_REGISTRY,
+                )
             per_layer.append(row)
             per_layer_kernel.append(krow)
             per_layer_h2d.append(h2d)
@@ -275,4 +351,85 @@ def profile_bnn_model(
         kernel_times=kernel_times,
         h2d_times=h2d_times,
         d2h_times=d2h_times,
+    )
+
+
+def profile_bnn_model(
+    model: BNNModel,
+    packed_params: list,
+    *,
+    batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128),
+    configs: Sequence[str] = CONFIGS,
+    repeats: int = 3,
+    seed: int = 0,
+    time_source: str = "measured",
+) -> ProfileTable:
+    """The paper's fixed-space sweep: every layer is timed under the
+    same candidate list (default CPU + 7 aspect configs)."""
+    configs = tuple(configs)
+    return _profile(
+        model,
+        packed_params,
+        lambda spec, packed, batch: configs,
+        batch_sizes=batch_sizes,
+        repeats=repeats,
+        seed=seed,
+        time_source=time_source,
+        prune_factor=None,
+    )
+
+
+def autotune_bnn_model(
+    model: BNNModel,
+    packed_params: list,
+    *,
+    registry=None,
+    batch_sizes: Sequence[int] = (1, 2, 4, 8, 16, 32, 64, 128),
+    repeats: int = 3,
+    seed: int = 0,
+    time_source: str = "measured",
+    prune_factor: float = 3.0,
+    platform: str | None = None,
+) -> ProfileTable:
+    """Registry-driven autotune sweep with variable per-layer spaces.
+
+    GEMM layers are timed under the fixed-8 configs **plus** every
+    registered variant whose applicability predicate accepts the
+    layer's dispatch shape on `platform`; elementwise layers keep the
+    fixed 8 (their candidates share one computation — only placement
+    matters).  Measured mode prunes dominated extended variants after
+    a one-repeat warm-up (:func:`prune_survivors`); the fixed 8 are
+    always fully timed, so any mapping feasible in the paper's space
+    remains feasible in the autotuned table.
+
+    ``platform=None`` resolves to the live JAX backend in measured
+    mode; in analytic mode it defaults to ``"tpu"`` — the analytic
+    sweep executes nothing, it prices the TPU target, so variants
+    gated off non-TPU hosts (Pallas tiles) must still be priced.
+    """
+    reg = registry if registry is not None else DEFAULT_REGISTRY
+    if platform is None and time_source == "analytic":
+        platform = "tpu"
+
+    def candidates(spec, packed, batch):
+        shape = gemm_shape_of(spec, packed, batch)
+        if shape is None:
+            return CONFIGS
+        extra = tuple(
+            v.name
+            for v in reg.applicable(shape, platform)
+            if v.name not in CONFIGS
+        )
+        return CONFIGS + extra
+
+    return _profile(
+        model,
+        packed_params,
+        candidates,
+        batch_sizes=batch_sizes,
+        repeats=repeats,
+        seed=seed,
+        time_source=time_source,
+        prune_factor=prune_factor if time_source == "measured" else None,
+        registry=reg,
     )

@@ -13,10 +13,25 @@ Each kernel ships with ``ref.py`` (pure-jnp oracle) and ``ops.py``
 structured implementations that the live profiler times on the host
 platform (kernels are validated in interpret mode; their TPU cost comes
 from the analytic model in ``repro.core.cost_model``).
+
+``registry.py`` is the open kernel-variant registry: every GEMM
+implementation — the fixed 8, the fused device reference, Pallas tile
+variants, and anything registered later — declares its name,
+placement, applicability predicate, and builder there; the profiler's
+autotune sweep and the mapped-model executors resolve variants through
+it (see docs/ARCHITECTURE.md §8).
 """
 
 from repro.kernels.ops import (
     xnor_gemm,
     binary_conv2d,
     flash_attention,
+)
+from repro.kernels.registry import (
+    DEFAULT_REGISTRY,
+    GemmShape,
+    KernelVariant,
+    VariantRegistry,
+    get_variant,
+    register,
 )

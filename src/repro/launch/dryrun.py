@@ -21,7 +21,6 @@ multiplication.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -10,18 +10,15 @@ hypothesis -> change -> before -> after (EXPERIMENTS.md §Perf).
 """
 
 import argparse
+import dataclasses
 import json
 from pathlib import Path
-
-import jax
 
 from repro import configs as C
 from repro.launch import hlo_analysis as H
 from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_BF16, build_lowered
 from repro.launch.mesh import make_production_mesh
-from repro.parallel.sharding import ShardScheme, default_scheme
-
-import dataclasses
+from repro.parallel.sharding import default_scheme
 
 # The three hillclimb cells (see EXPERIMENTS.md §Perf for selection
 # rationale) and their variant ladders. Each variant records the

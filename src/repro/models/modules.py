@@ -6,7 +6,6 @@ f32, residual stream in bf16.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -195,9 +194,9 @@ def chunked_attention_kv_parallel(
         # log-sum-exp combine across the sharded part dim
         m = jnp.max(m_n, axis=1, keepdims=True)      # (B,1,H,qc,1)
         w = jnp.exp(m_n - m)
-        l = jnp.sum(l_n * w, axis=1)                 # (B,H,qc,1)
+        lsum = jnp.sum(l_n * w, axis=1)              # (B,H,qc,1)
         acc = jnp.sum(acc_n * w, axis=1)             # (B,H,qc,D)
-        out = (acc / l).transpose(0, 2, 1, 3)        # (B,qc,H,D)
+        out = (acc / lsum).transpose(0, 2, 1, 3)     # (B,qc,H,D)
         return None, out.astype(q.dtype)
 
     body = jax.checkpoint(q_body) if remat_chunks else q_body

@@ -11,7 +11,6 @@ all-reduce — halving inter-pod ICI bytes — and back after.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -80,9 +79,10 @@ def make_train_step(
             mb = B // accum_steps
 
             def body(acc, i):
-                sl = lambda a: jax.lax.dynamic_slice_in_dim(
-                    a, i * mb, mb, axis=0
-                )
+                def sl(a):
+                    return jax.lax.dynamic_slice_in_dim(
+                        a, i * mb, mb, axis=0
+                    )
                 loss, ce, aux, g = grads_of(
                     params, sl(tokens), sl(labels),
                     None if fe is None else sl(fe),

@@ -19,7 +19,7 @@ from repro.models.config import ModelConfig
 from repro.models.mamba2 import mamba_block
 from repro.models.moe import moe_ffn
 from repro.parallel.constrain import (
-    attn_kv_parallel_enabled, constrain, constrain_kv, constrain_ssd,
+    attn_kv_parallel_enabled, constrain_kv,
     pin_batch, sp_residual_enabled,
 )
 

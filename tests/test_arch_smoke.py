@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro import configs as C
-from repro.models.steps import loss_fn, make_train_step
+from repro.models.steps import make_train_step
 from repro.models.transformer import (
-    forward, init_cache, init_params, param_specs,
+    forward, init_cache, init_params,
 )
 from repro.optim import adamw
 

@@ -1,0 +1,77 @@
+"""bench_smoke regression gate: pure comparison logic (no timing —
+the actual tiny benchmark run is exercised by the CI bench-smoke job
+and the committed baseline)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.bench_smoke import compare, gate  # noqa: E402
+
+
+def _doc(metrics, settings=None):
+    return {
+        "schema": 1,
+        "settings": settings or {"kernel_bench": {"scale": 0.25}},
+        "metrics": metrics,
+    }
+
+
+def test_compare_passes_within_tolerance():
+    base = {"a": {"us": 100.0}, "b": {"us": 50.0}}
+    pr = {"a": {"us": 120.0}, "b": {"us": 40.0}}
+    failures, notes = compare(pr, base, tolerance=0.25)
+    assert failures == []
+    assert len(notes) == 2
+
+
+def test_compare_fails_on_regression_over_tolerance():
+    base = {"a": {"us": 100.0}}
+    pr = {"a": {"us": 126.0}}
+    failures, _ = compare(pr, base, tolerance=0.25)
+    assert len(failures) == 1
+    assert "a" in failures[0] and "tolerance" in failures[0]
+    # looser tolerance clears it
+    failures, _ = compare(pr, base, tolerance=0.30)
+    assert failures == []
+
+
+def test_compare_fails_on_missing_metric_but_not_new():
+    base = {"gone": {"us": 10.0}}
+    pr = {"new": {"us": 10.0}}
+    failures, notes = compare(pr, base, tolerance=0.25)
+    assert len(failures) == 1 and "missing" in failures[0]
+    assert any("new metric" in n for n in notes)
+
+
+def test_gate_refuses_settings_mismatch():
+    base = _doc({"a": {"us": 100.0}}, settings={"kernel_bench": {"scale": 0.25}})
+    pr = _doc({"a": {"us": 100.0}}, settings={"kernel_bench": {"scale": 0.5}})
+    failures, notes = gate(pr, base, tolerance=0.25)
+    assert len(failures) == 1 and "settings changed" in failures[0]
+    assert notes == []
+
+
+def test_gate_delegates_to_compare_when_settings_match():
+    base = _doc({"a": {"us": 100.0}})
+    pr = _doc({"a": {"us": 90.0}})
+    failures, notes = gate(pr, base, tolerance=0.25)
+    assert failures == [] and len(notes) == 1
+
+
+def test_committed_baseline_matches_current_settings():
+    """The committed baseline must gate the workload bench_smoke
+    actually runs — a SMOKE_KWARGS change without a refresh fails."""
+    import json
+
+    from benchmarks.bench_smoke import BASELINE_PATH, SMOKE_KWARGS
+
+    doc = json.loads(BASELINE_PATH.read_text())
+    want = {
+        k: {kk: list(v) if isinstance(v, tuple) else v
+            for kk, v in kw.items()}
+        for k, kw in SMOKE_KWARGS.items()
+    }
+    assert doc["settings"] == want
+    assert doc["metrics"], "baseline has no metrics"

@@ -1,6 +1,5 @@
 """Analytic TPU cost model: structural properties the mapper relies on."""
 
-import pytest
 
 from repro.bnn import build_model
 from repro.core import cost_model as cm

@@ -119,6 +119,6 @@ def test_analytic_source_runs():
     ec = map_efficient_configuration(table)
     assert ec.proper_batch_size in (1, 16)
     # the analytic TPU model should keep tiny layers on the host
-    kinds = {l.split(":")[1][:2] for l, c in zip(
+    kinds = {label.split(":")[1][:2] for label, c in zip(
         ec.layer_labels, ec.layer_configs) if c == "CPU"}
     assert kinds, "analytic model mapped nothing to CPU"

@@ -4,7 +4,6 @@ a real compiled program with known structure."""
 
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H

@@ -8,10 +8,10 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.bnn.binarize import (
-    PACK_W, np_pack_bits, pack_bits, unpack_bits, packed_len
+    np_pack_bits, pack_bits, unpack_bits, packed_len
 )
 from repro.kernels.ops import xnor_gemm, binary_conv2d
-from repro.kernels.ref import xnor_gemm_ref, binary_conv2d_ref
+from repro.kernels.ref import xnor_gemm_ref
 from repro.kernels.variants import xnor_gemm_variant
 
 ALL_ASPECTS = [

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.models.config import ModelConfig, SSMConfig
+from repro.models.config import ModelConfig
 from repro.models.mamba2 import causal_conv1d, ssd_chunked
 from repro.models.modules import (
     chunked_attention, chunked_attention_kv_parallel, rope,

@@ -10,7 +10,7 @@ from _hypothesis_compat import given, settings, st
 from repro.ckpt import (
     CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
 )
-from repro.data import ShardedBatcher, make_image_dataset, make_token_stream
+from repro.data import ShardedBatcher, make_token_stream
 from repro.optim import (
     Int8ErrorFeedback, adamw, clip_by_global_norm, compress_bf16,
     cosine_schedule, decompress_bf16, linear_warmup_cosine, lion, sgd,

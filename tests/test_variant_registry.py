@@ -1,0 +1,461 @@
+"""Kernel-variant registry + autotuner: registry API, bit-exactness of
+every applicable variant vs the reference GEMM, warm-up pruning,
+variable-size config spaces end to end (profiler -> mapper -> executor
+-> JSON), and the autotuned-vs-fixed-8 acceptance bound."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.bnn import build_model
+from repro.bnn.binarize import pack_bits
+from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
+from repro.core import cost_model as cm
+from repro.core.mapped_model import build_mapped_model, build_segment_fns
+from repro.core.mapper import (
+    EfficientConfiguration,
+    configuration_from_mapping,
+    map_efficient_configuration,
+    placement_of,
+)
+from repro.core.parallel_config import (
+    CONFIGS,
+    CPU,
+    aspects_of,
+    is_host_config,
+    validate,
+)
+from repro.core.profiler import (
+    autotune_bnn_model,
+    gemm_shape_of,
+    profile_bnn_model,
+    prune_survivors,
+)
+from repro.kernels.ref import xnor_gemm_ref
+from repro.kernels.registry import (
+    DEFAULT_REGISTRY,
+    DEVICE,
+    HOST,
+    GemmShape,
+    KernelVariant,
+    VariantRegistry,
+)
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+# ---------------------------------------------------------------------------
+# Registry API
+# ---------------------------------------------------------------------------
+
+
+def test_default_registry_contents():
+    names = DEFAULT_REGISTRY.names()
+    for cfg in CONFIGS:  # the paper's 8 resolve by their legacy names
+        assert cfg in DEFAULT_REGISTRY, cfg
+    assert "xla_fused" in names
+    assert any(n.startswith("pallas_") for n in names)
+    assert len(set(names)) == len(names)
+    assert DEFAULT_REGISTRY.get(CPU).placement == HOST
+    assert DEFAULT_REGISTRY.get("xla_fused").placement == DEVICE
+
+
+def test_register_rejects_duplicates_and_bad_placement():
+    reg = VariantRegistry()
+    v = KernelVariant(name="v1", builder=xnor_gemm_ref)
+    reg.register(v)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(v)
+    reg.register(
+        KernelVariant(name="v1", builder=xnor_gemm_ref), replace=True
+    )
+    with pytest.raises(ValueError, match="placement"):
+        reg.register(
+            KernelVariant(
+                name="v2", builder=xnor_gemm_ref, placement="gpu"
+            )
+        )
+    with pytest.raises(ValueError, match="unknown kernel variant"):
+        reg.get("nope")
+    assert reg.remove("v1").name == "v1"
+    assert "v1" not in reg
+
+
+def test_fixed8_placement_and_aspects_are_frozen():
+    """The fixed-8 names short-circuit placement/pricing before the
+    registry, so re-registering one must not change those semantics
+    (builder hot-swaps keep them; divergent metadata is rejected)."""
+    reg = VariantRegistry()
+    with pytest.raises(ValueError, match="frozen placement/aspects"):
+        reg.register(
+            KernelVariant(name="X", builder=xnor_gemm_ref, placement=HOST)
+        )
+    with pytest.raises(ValueError, match="frozen placement/aspects"):
+        reg.register(
+            KernelVariant(
+                name=CPU, builder=xnor_gemm_ref, placement=HOST,
+                aspects=("X",), analytic="host",
+            )
+        )
+    # same semantics, different builder: allowed
+    reg.register(
+        KernelVariant(
+            name="X", builder=xnor_gemm_ref, placement=DEVICE,
+            aspects=("X",),
+        )
+    )
+    assert reg.get("X").builder is xnor_gemm_ref
+
+
+def test_applicability_filtering():
+    reg = VariantRegistry()
+    reg.register(KernelVariant(name="always", builder=xnor_gemm_ref))
+    reg.register(
+        KernelVariant(
+            name="small_only",
+            builder=xnor_gemm_ref,
+            applicable=lambda shape, platform: shape.work <= 100,
+        )
+    )
+    small = GemmShape(b=1, p=5, n=2, kw=10)
+    big = GemmShape(b=8, p=100, n=64, kw=16)
+    assert [v.name for v in reg.applicable(small, "cpu")] == [
+        "always", "small_only",
+    ]
+    assert [v.name for v in reg.applicable(big, "cpu")] == ["always"]
+
+
+def test_parallel_config_consults_registry():
+    assert validate("xla_fused") == "xla_fused"
+    assert validate("pallas_p64n64") == "pallas_p64n64"
+    with pytest.raises(ValueError, match="unknown parallel config"):
+        validate("not_a_variant")
+    assert aspects_of("xla_fused") == ("X", "Y", "Z")
+    assert aspects_of("XZ") == ("X", "Z")
+    assert aspects_of(CPU) == ()
+    with pytest.raises(ValueError):
+        aspects_of("not_a_variant")
+    assert is_host_config(CPU)
+    assert not is_host_config("xla_fused")
+    assert placement_of("pallas_p128n128") == "device"
+    # a typo'd name must fail loudly, never default to device placement
+    with pytest.raises(ValueError, match="unknown parallel config"):
+        is_host_config("not_a_variant")
+    # custom registries resolve placement for their own names
+    reg = VariantRegistry()
+    reg.register(
+        KernelVariant(
+            name="my_host_v", builder=xnor_gemm_ref, placement=HOST,
+            aspects=(), analytic="host",
+        )
+    )
+    assert is_host_config("my_host_v", reg)
+    with pytest.raises(ValueError):
+        is_host_config("my_host_v")     # not globally registered
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: every applicable registered variant vs the reference
+# ---------------------------------------------------------------------------
+
+_SHAPES = (
+    (1, 1, 32, 1),
+    (2, 9, 33, 5),
+    (2, 24, 96, 17),
+    (3, 17, 64, 40),
+)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    case=st.integers(0, len(_SHAPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_every_applicable_variant_bit_exact(case, seed):
+    """Property (acceptance): any variant the registry deems applicable
+    to a shape must compute exactly xnor_gemm_ref on it."""
+    b, p, k_bits, n = _SHAPES[case]
+    rng = np.random.default_rng(seed)
+    a_pm1 = jnp.asarray(
+        np.where(rng.random((b, p, k_bits)) < 0.5, 1.0, -1.0)
+    )
+    w_pm1 = jnp.asarray(
+        np.where(rng.random((n, k_bits)) < 0.5, 1.0, -1.0)
+    )
+    a_words = pack_bits(a_pm1, pad_bit=0)
+    w_words = pack_bits(w_pm1, pad_bit=1)
+    want = np.asarray(xnor_gemm_ref(a_words, w_words, k_bits))
+    shape = GemmShape(b=b, p=p, n=n, kw=int(a_words.shape[-1]))
+    variants = DEFAULT_REGISTRY.applicable(shape)
+    assert len(variants) >= len(CONFIGS)
+    for v in variants:
+        got = np.asarray(v.builder(a_words, w_words, k_bits))
+        assert np.array_equal(want, got), f"variant {v.name} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Autotune: variable spaces, pruning, fixed-8 bound
+# ---------------------------------------------------------------------------
+
+
+def _small_model():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    return m, packed
+
+
+def test_prune_survivors_decision():
+    warmups = {"CPU": 5.0, "X": 1.0, "ext_ok": 2.9, "ext_slow": 3.1}
+    kept = prune_survivors(warmups, prune_factor=3.0)
+    assert "ext_ok" in kept
+    assert "ext_slow" not in kept
+    # fixed-8 names survive no matter how slow the warm-up said they are
+    assert "CPU" in kept and "X" in kept
+    assert prune_survivors({}) == ()
+
+
+def test_autotune_analytic_variable_spaces_and_bound():
+    """Acceptance: the autotuned table's DP expected end-to-end time is
+    <= the fixed-8 DP's on the same (analytic) profile, and GEMM rows
+    are strict supersets of the fixed-8 space."""
+    m, packed = _small_model()
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=(1, 16), time_source="analytic"
+    )
+    saw_extended = False
+    for b in table.batch_sizes:
+        for i, spec in enumerate(m.specs):
+            row = set(table.configs_for(b, i))
+            assert set(CONFIGS) <= row
+            if spec.kind in ("conv", "fc"):
+                assert "xla_fused" in row
+                # analytic mode prices the TPU target: pallas tile
+                # variants are candidates even on large layers the
+                # interpret-mode cap would exclude on this CPU host
+                assert "pallas_p128n128" in row
+                saw_extended = True
+            else:
+                assert row == set(CONFIGS)
+    assert saw_extended
+    dp_full = map_efficient_configuration(table, policy="dp")
+    dp_fixed = map_efficient_configuration(
+        table, policy="dp", configs=CONFIGS
+    )
+    assert (
+        dp_full.expected_time_per_example
+        <= dp_fixed.expected_time_per_example + 1e-15
+    )
+    # greedy over the wider space is bounded the same way
+    g_full = map_efficient_configuration(table, policy="greedy")
+    g_fixed = map_efficient_configuration(
+        table, policy="greedy", configs=CONFIGS
+    )
+    assert (
+        g_full.expected_time_per_example
+        <= g_fixed.expected_time_per_example + 1e-15
+    )
+    # config_space records the per-layer searchable space, variable-size
+    sizes = {len(cs) for cs in dp_full.config_space}
+    assert len(sizes) > 1
+    assert all(
+        len(cs) == len(CONFIGS) for cs in dp_fixed.config_space
+    )
+
+
+def test_autotune_measured_bound_and_pruning():
+    m, packed = _small_model()
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=(1,), repeats=1, prune_factor=3.0
+    )
+    for i, spec in enumerate(m.specs):
+        row = set(table.configs_for(1, i))
+        # pruning may drop extended variants but never the fixed 8
+        assert set(CONFIGS) <= row
+    dp_full = map_efficient_configuration(table, policy="dp")
+    dp_fixed = map_efficient_configuration(
+        table, policy="dp", configs=CONFIGS
+    )
+    assert (
+        dp_full.expected_time_per_example
+        <= dp_fixed.expected_time_per_example + 1e-12
+    )
+
+
+def test_autotune_honors_custom_registry():
+    """A variant registered in a custom registry is profiled, priced
+    analytically, and executable — without touching the process-wide
+    default registry."""
+    reg = VariantRegistry()
+    for v in DEFAULT_REGISTRY:
+        reg.register(v)
+    reg.register(
+        KernelVariant(
+            name="custom_ref",
+            builder=xnor_gemm_ref,
+            placement=DEVICE,
+            analytic="fused",
+        )
+    )
+    m, packed = _small_model()
+    table = autotune_bnn_model(
+        m, packed, registry=reg, batch_sizes=(1,), repeats=1,
+        prune_factor=float("inf"),
+    )
+    gemm_rows = [
+        set(table.configs_for(1, i))
+        for i, spec in enumerate(m.specs)
+        if spec.kind in ("conv", "fc")
+    ]
+    assert all("custom_ref" in row for row in gemm_rows)
+    assert "custom_ref" not in DEFAULT_REGISTRY
+    # analytic pricing resolves through the custom registry too
+    atable = autotune_bnn_model(
+        m, packed, registry=reg, batch_sizes=(1,),
+        time_source="analytic",
+    )
+    idx = next(
+        i for i, s in enumerate(m.specs) if s.kind in ("conv", "fc")
+    )
+    assert "custom_ref" in atable.configs_for(1, idx)
+    # device-placed: the paper-semantics total carries the boundary
+    assert atable.times[1][idx]["custom_ref"] == pytest.approx(
+        atable.kernel_time(1, idx, "custom_ref")
+        + atable.h2d(1, idx) + atable.d2h(1, idx)
+    )
+    # mapping/executing a variant requires global registration (the
+    # placement authority and validate() are global); after that the
+    # custom name flows through pricing and execution like any other
+    mapping = [
+        "custom_ref" if s.kind in ("conv", "fc") else CPU
+        for s in m.specs
+    ]
+    with pytest.raises(ValueError):
+        configuration_from_mapping(atable, 1, mapping)
+    DEFAULT_REGISTRY.register(reg.get("custom_ref"))
+    try:
+        ec = configuration_from_mapping(atable, 1, mapping)
+        x = prepare_input_packed(
+            jax.random.uniform(
+                jax.random.PRNGKey(3), (1, *m.input_hw, m.in_channels)
+            )
+        )
+        got = build_mapped_model(m, packed, ec, registry=reg)(x)
+        want = forward_packed(m.specs, packed, x)
+        assert np.array_equal(np.asarray(want), np.asarray(got))
+    finally:
+        DEFAULT_REGISTRY.remove("custom_ref")
+
+
+def test_analytic_fused_never_loses_to_tiled():
+    """The fused device reference's analytic kernel time is <= every
+    tiled aspect config's for any GEMM (single-pass traffic is a lower
+    bound on the loop-nest reuse traffic)."""
+    for dims in (
+        cm.GemmDims(b=2, p=1024, n=1024, kw=4),
+        cm.GemmDims(b=8, p=196, n=64, kw=9),
+        cm.GemmDims(b=1, p=1, n=512, kw=49),
+    ):
+        fused = cm.gemm_kernel_time_tpu(dims, "xla_fused")
+        for cfg in CONFIGS[1:]:
+            assert fused <= cm.gemm_kernel_time_tpu(dims, cfg) + 1e-15
+
+
+def test_gemm_shape_of_matches_cost_model_dims():
+    m, packed = _small_model()
+    for spec, p in zip(m.specs, packed):
+        shape = gemm_shape_of(spec, p, 4)
+        dims = cm.gemm_dims_for(spec, 4)
+        if dims is None:
+            assert shape is None
+        else:
+            assert (shape.b, shape.p, shape.n) == (
+                dims.b, dims.p, dims.n
+            )
+            assert shape.kw == dims.kw
+
+
+# ---------------------------------------------------------------------------
+# Variable-size config spaces end to end: executor + JSON
+# ---------------------------------------------------------------------------
+
+
+def test_extended_mapping_executes_bit_exact():
+    m, packed = _small_model()
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=(1, 4), time_source="analytic"
+    )
+    mapping = [
+        "xla_fused" if s.kind in ("conv", "fc") else CPU for s in m.specs
+    ]
+    # at scale 0.25 the last FC is small enough for interpret-mode pallas
+    assert m.specs[-1].kind == "fc"
+    mapping[-1] = "pallas_p64n64"
+    ec = configuration_from_mapping(table, 4, mapping)
+    x = prepare_input_packed(
+        jax.random.uniform(
+            jax.random.PRNGKey(1), (4, *m.input_hw, m.in_channels)
+        )
+    )
+    want = np.asarray(forward_packed(m.specs, packed, x))
+    fused = build_mapped_model(m, packed, ec, fused=True)
+    assert np.array_equal(want, np.asarray(fused(x)))
+    faithful = build_mapped_model(m, packed, ec, fused=False)
+    assert np.array_equal(want, np.asarray(faithful(x)))
+    out = x
+    for _seg, fn in build_segment_fns(m, packed, ec):
+        out = fn(out)
+    assert np.array_equal(want, np.asarray(out))
+
+
+def test_config_space_json_roundtrip():
+    m, packed = _small_model()
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=(1,), time_source="analytic"
+    )
+    for policy in ("greedy", "dp"):
+        ec = map_efficient_configuration(table, policy=policy)
+        back = EfficientConfiguration.from_json(ec.to_json())
+        assert back == ec
+        d = json.loads(ec.to_json())
+        assert all("candidates" in x for x in d["layers"])
+        # per-layer candidate lists are genuinely variable-size
+        assert len({len(x["candidates"]) for x in d["layers"]}) > 1
+
+
+def test_legacy_fixed8_json_still_loads_and_reserializes():
+    """Acceptance: the committed pre-registry artifact round-trips
+    under the variable-size schema."""
+    src = (RESULTS / "efficient_config_fmnist.json").read_text()
+    ec = EfficientConfiguration.from_json(src)
+    assert ec.policy == "dp"
+    assert ec.config_space == ()            # legacy: fixed-8 implied
+    assert all(c in CONFIGS for c in ec.layer_configs)
+    assert all(validate(c) for c in ec.layer_configs)
+    again = EfficientConfiguration.from_json(ec.to_json())
+    assert again == ec
+    # the re-serialized form stays legacy-shaped: no candidates key
+    d = json.loads(ec.to_json())
+    assert all("candidates" not in x for x in d["layers"])
+    # and the original numbers survive the trip
+    orig = json.loads(src)
+    assert d["expected_time_per_example"] == (
+        orig["expected_time_per_example"]
+    )
+    assert [x["config"] for x in d["layers"]] == [
+        x["config"] for x in orig["layers"]
+    ]
+
+
+def test_fixed_profile_unchanged_by_registry():
+    """profile_bnn_model keeps the paper's fixed-8 rows exactly."""
+    m, packed = _small_model()
+    table = profile_bnn_model(
+        m, packed, batch_sizes=(1,), time_source="analytic"
+    )
+    for i in range(len(table.layer_labels)):
+        assert table.configs_for(1, i) == CONFIGS
