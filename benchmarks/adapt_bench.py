@@ -1,0 +1,333 @@
+"""Adaptive-runtime benchmark: inject synthetic contention on the
+processor the serving mapping leans on, and compare a frozen mapping
+against the drift-remapping engine.
+
+The search space is the paper's Fig. 5 baseline pair — sequential
+``CPU`` vs fully-parallel ``XYZ`` — because on this container those
+two placements are near-tied end to end, which is exactly the regime
+where adaptation matters: when the alternative processor is close, a
+contended optimum *should* be abandoned, and the recovered latency
+lands within a few percent of the pre-contention optimum.  (With the
+full variant space the device side dominates this host outright and a
+"recovered" mapping would just be the device mapping — still correct,
+but a trivial demonstration.)
+
+Phases per batch size, both engines starting from the same DP mapping
+over that space:
+
+1. **calibrate** — uncontended serving with telemetry on.  Live
+   pipeline wall times differ systematically from the profiler's
+   isolated per-layer times (dispatch, sync, conversion overheads), so
+   the controller's first folds *calibrate* the table to live behavior
+   — the detector goes quiet once predictions match what the pipeline
+   actually does.  Runs until the journal is stable (no new entry for
+   a few batches, bounded by ``calibrate_max``).
+2. **pre** — the uncontended steady state: the pre-contention optimum
+   recovery is judged against.
+3. **contention on** — every segment placed on the *dominant*
+   processor of the calibrated mapping now pays a busy-wait tax (a
+   stand-in co-tenant burning that processor; the other placement is
+   unaffected).  The *frozen* engine keeps its mapping and stays
+   degraded.  The *adaptive* engine's telemetry sees those segments
+   blow past predictions; after the hysteresis clears, the controller
+   folds the observations in, re-runs the DP (which routes the
+   affected layers onto the uncontended processor), and hot-swaps.
+4. **steady** — the adaptive engine's recovered steady state: the
+   median of the last ``steady_k`` batches, measured only once the
+   last hot swap is at least a full window behind (bounded by
+   ``settle_max`` extra batches) — a window straddling a swap would
+   mix compile stalls and half-migrated mappings into "steady".
+
+The tax must dominate profiling noise: telemetry can only correct the
+rows of placements that actually *execute*, so the DP's opinion of the
+uncontended alternative rests on its profiled rows alone — a tax
+comparable to best-of-N profiling jitter could leave the corrected
+table still (wrongly) preferring the contended side.  The default
+``tax_s`` is an order of magnitude above per-segment times at bench
+scale, so the fold always flips the comparison.
+
+Assertions (hard, every run): all adaptive-engine responses — before,
+during, and after remaps — are bit-exact against the serial packed
+reference; the controller performs at least one contended remap within
+``converge_batches`` batches of contention onset; and the recovered
+steady state holds the line against the frozen engine (loose 1.5x
+bound on a spike-robust percentile estimator — per-segment runtime
+overheads are not in the cost model, so "slightly above frozen on a
+noisy box" is not a broken loop; the typical result is ~0.3x).
+Whether remapping went quiet within the settle budget is reported
+(``quiet=``), not asserted: on a genuinely still-shifting box the
+detector *should* keep firing.
+``recovery=`` in the derived column is the headline: recovered /
+pre-contention latency (target <= 1.15x, reported rather than
+hard-gated — wall clocks on shared CI boxes are too noisy to fail a
+build on); ``frozen=`` is what not adapting costs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.adapt import DriftDetector, RemapController, SegmentTelemetry
+from repro.bnn import build_model
+from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
+from repro.core.mapper import map_efficient_configuration
+from repro.core.parallel_config import CPU, FULL_GPU
+from repro.core.profiler import profile_bnn_model
+from repro.serving import ServingEngine
+
+# the near-tied placement pair the experiment searches over (paper
+# Fig. 5's sequential-CPU and fully-parallel baselines)
+SPACE = (CPU, FULL_GPU)
+
+
+class Contention:
+    """A switchable busy-wait tax per segment execution on one
+    placement — the synthetic co-tenant.  Busy-waiting (not sleeping)
+    models a core actually stolen from that processor."""
+
+    def __init__(self):
+        self.placement: str | None = None     # mapper HOST/DEVICE value
+        self.tax_s = 0.0
+
+    def apply(self, placement: str):
+        if self.tax_s <= 0.0 or placement != self.placement:
+            return
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < self.tax_s:
+            pass
+
+
+class ContendedEngine(ServingEngine):
+    """ServingEngine whose segments pay the contention tax.  The wrap
+    happens in ``_build_pipeline`` so every pipeline the engine ever
+    builds — including the ones hot-swapped in by remaps — runs under
+    the same contention; escaping it requires actually moving work off
+    the contended processor, which is the thing being measured."""
+
+    def __init__(self, *args, contention: Contention, **kwargs):
+        self._contention = contention
+        super().__init__(*args, **kwargs)
+
+    def _build_pipeline(self, config):
+        pipe = super()._build_pipeline(config)
+
+        def taxed(seg, fn):
+            def run(x):
+                self._contention.apply(seg.placement)
+                return fn(x)
+
+            return run
+
+        pipe.segment_fns = [
+            (seg, taxed(seg, fn)) for seg, fn in pipe.segment_fns
+        ]
+        return pipe
+
+
+class _Traffic:
+    """Deterministic stream of (packed batch, reference outputs); both
+    engines replay identical phases from identical offsets."""
+
+    def __init__(self, model, packed, batch):
+        self.model, self.packed, self.batch = model, packed, batch
+        self._cache: dict = {}
+
+    def at(self, i: int):
+        if i not in self._cache:
+            m = self.model
+            x01 = jax.random.uniform(
+                jax.random.PRNGKey(100 + i),
+                (self.batch, *m.input_hw, m.in_channels),
+            )
+            xw = np.asarray(prepare_input_packed(x01))
+            ref = np.asarray(forward_packed(m.specs, self.packed, xw))
+            self._cache[i] = (xw, ref)
+        return self._cache[i]
+
+
+def _serve(engine, traffic, start, n, step=None):
+    """Serve batches [start, start+n) through one forced step each;
+    asserts bit-exactness, returns per-batch wall seconds."""
+    step = step if step is not None else engine.step
+    lat = []
+    for i in range(start, start + n):
+        xw, ref = traffic.at(i)
+        reqs = [engine.submit(xw[j]) for j in range(xw.shape[0])]
+        t0 = time.perf_counter()
+        step(force=True)
+        lat.append(time.perf_counter() - t0)
+        for j, req in enumerate(reqs):
+            got = req.wait(timeout=30.0)
+            assert np.array_equal(got, ref[j]), "output != reference"
+    return lat
+
+
+def run(
+    scale: float = 0.5,
+    batch_sizes=(4,),
+    repeats: int = 1,
+    profile_repeats: int = 2,
+    calibrate_min: int = 4,
+    calibrate_max: int = 20,
+    pre_batches: int = 6,
+    contended_batches: int = 30,
+    converge_batches: int = 24,
+    steady_k: int = 5,
+    settle_max: int = 16,
+    tax_s: float = 8e-3,
+):
+    del repeats  # one pass is the experiment; kept for harness symmetry
+    m = build_model("fashion_mnist", scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(
+        m, packed, batch_sizes=tuple(batch_sizes), repeats=profile_repeats
+    )
+
+    rows = []
+    for b in batch_sizes:
+        ec0 = map_efficient_configuration(
+            table, configs=SPACE, policy="dp", batch_sizes=(b,)
+        )
+        traffic = _Traffic(m, packed, b)
+        contention = Contention()
+        telemetry = SegmentTelemetry(alpha=0.5, window=32, sample_every=1)
+        adaptive = ContendedEngine(
+            m, packed, ec0,
+            allowed_batch_sizes=table.batch_sizes, contention=contention,
+            telemetry=telemetry,
+        )
+        # rel_threshold matters: a fixed per-segment tax folded into
+        # per-layer rows can leave a shrunken contended segment whose
+        # observed/predicted ratio sits just above 1.5x — the detector
+        # must keep firing until the DP walks it off entirely
+        controller = RemapController(
+            adaptive, table, configs=SPACE,
+            detector=DriftDetector(
+                rel_threshold=0.6, min_samples=3, direction="both"
+            ),
+        )
+
+        # phase 1: calibrate until the journal is stable
+        i = 0
+        _serve(adaptive, traffic, i, calibrate_min, step=controller.step)
+        i += calibrate_min
+        quiet = 0
+        while quiet < 3 and i - calibrate_min < calibrate_max:
+            n_before = len(controller.journal)
+            _serve(adaptive, traffic, i, 1, step=controller.step)
+            i += 1
+            quiet = quiet + 1 if len(controller.journal) == n_before else 0
+        calibration_remaps = len(controller.journal)
+
+        # the frozen engine serves the *calibrated* optimum — the
+        # strongest non-adaptive baseline, not the raw-profile mapping
+        frozen = ContendedEngine(
+            m, packed, adaptive.config,
+            allowed_batch_sizes=table.batch_sizes, contention=contention,
+        )
+        _serve(frozen, traffic, 0, 2)    # compile
+
+        # phase 2: the uncontended optimum
+        frozen_pre = _serve(frozen, traffic, i, pre_batches)
+        adaptive_pre = _serve(adaptive, traffic, i, pre_batches,
+                              step=controller.step)
+        i += pre_batches
+        pre_s = float(np.median(adaptive_pre))
+        pre_frozen_s = float(np.median(frozen_pre))
+
+        # phase 3: contend the placement the calibrated mapping leans
+        # on; frozen stays put, adaptive walks off it
+        host_share, device_share = adaptive.config.stage_times()
+        from repro.core.mapper import DEVICE, HOST
+
+        contention.placement = (
+            DEVICE if device_share >= host_share else HOST
+        )
+        contention.tax_s = tax_s
+        telemetry.reset()          # clean floor baseline for the phase
+        onset_step = adaptive.steps
+        frozen_lat = _serve(frozen, traffic, i, contended_batches)
+        adaptive_lat = _serve(adaptive, traffic, i, contended_batches,
+                              step=controller.step)
+        i += contended_batches
+        # settle: keep serving (bounded) until the last swap is a full
+        # steady window behind, so the measurement holds no compile
+        # stalls or half-migrated mappings
+        settled = 0
+        while settled < settle_max and controller.journal and (
+            adaptive.steps - controller.journal[-1].at_step <= steady_k
+        ):
+            adaptive_lat += _serve(adaptive, traffic, i, 1,
+                                   step=controller.step)
+            i += 1
+            settled += 1
+        contended = [
+            r for r in controller.journal if r.at_step > onset_step
+        ]
+        assert contended, (
+            f"no remap within {contended_batches} contended batches"
+        )
+        first_remap = contended[0].at_step - onset_step
+        assert first_remap <= converge_batches, (
+            f"first contended remap took {first_remap} batches "
+            f"(budget {converge_batches})"
+        )
+        assert adaptive.swaps == len(controller.journal)
+        quiet = (
+            adaptive.steps - controller.journal[-1].at_step > steady_k
+        )
+
+        frozen_s = float(np.median(frozen_lat))
+        # steady-state estimator robust to swap-compile spikes and OS
+        # jitter: the 25th percentile of the last 2k batches tracks
+        # the recovered floor even when late remaps (a genuinely
+        # still-shifting box keeps the detector firing — that is it
+        # working) drop recompile stalls into the window
+        steady_s = float(
+            np.percentile(adaptive_lat[-2 * steady_k:], 25)
+        )
+        # the adapted mapping must at least hold the line against the
+        # frozen one.  The bound is deliberately loose (1.5x):
+        # per-segment Python/sync overheads are not in the cost model,
+        # so a converged mapping can sit a little above frozen on a
+        # noisy box without the loop being broken — the demonstration
+        # number is `vs_frozen` below, typically ~0.3x here.
+        assert steady_s < frozen_s * 1.5, (
+            "adaptive steady state much worse than frozen "
+            f"({steady_s * 1e3:.2f}ms vs {frozen_s * 1e3:.2f}ms)"
+        )
+
+        per_ex = 1e6 / b
+        contended_left = sum(
+            s.placement == contention.placement
+            for s in adaptive.config.segments()
+        )
+        # a FUNCTIONAL row: us=0 marks it not-timing-gated.  The hard
+        # asserts above are the gate (bit-exactness, convergence, the
+        # 1.5x frozen bound); the steady-state wall time itself is
+        # bimodal on a loaded box — full escape vs a legitimate
+        # partial stall when the uncontended side's profiled rows are
+        # noise-inflated — so gating it at a fixed tolerance would
+        # flake.  All measurements ride in `derived`.
+        rows.append((
+            f"adapt/{m.name}/b{b}/contended_adaptive",
+            0.0,
+            f"steady_us={steady_s * per_ex:.1f};"
+            f"recovery={steady_s / pre_s:.2f}x;"
+            f"pre_us={pre_s * per_ex:.1f};"
+            f"frozen_pre_us={pre_frozen_s * per_ex:.1f};"
+            f"contended_frozen_us={frozen_s * per_ex:.1f};"
+            f"frozen_degraded={frozen_s / pre_frozen_s:.2f}x;"
+            f"vs_frozen={steady_s / frozen_s:.2f}x;"
+            f"tax_ms={tax_s * 1e3:.1f};"
+            f"contending={contention.placement};"
+            f"remaps={len(contended)};"
+            f"first_remap_batches={first_remap};"
+            f"quiet={quiet};"
+            f"contended_segments_left={contended_left};"
+            f"calibration_remaps={calibration_remaps}",
+        ))
+    return rows

@@ -13,9 +13,12 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   serve_bench        -> beyond-paper: segment-pipelined vs serial
                         serving (EfficientConfiguration.segments() ->
                         repro.serving), throughput + p50/p99
+  adapt_bench        -> beyond-paper: drift-triggered remapping under
+                        injected contention (repro.adapt) — frozen vs
+                        adaptive latency, recovery ratio
 
-The CI regression gate over the tiny-size variants of kernel_bench and
-serve_bench lives in ``benchmarks/bench_smoke.py``.
+The CI regression gate over the tiny-size variants of kernel_bench,
+serve_bench and adapt_bench lives in ``benchmarks/bench_smoke.py``.
 """
 
 from __future__ import annotations
@@ -26,8 +29,8 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        batch_sweep, efficient_configs, kernel_bench, profile_layers,
-        roofline, serve_bench,
+        adapt_bench, batch_sweep, efficient_configs, kernel_bench,
+        profile_layers, roofline, serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -50,6 +53,8 @@ def main() -> None:
          if quick else {}),
         ("serve_bench", serve_bench.run,
          SMOKE_KWARGS["serve_bench"] if quick else {}),
+        ("adapt_bench", adapt_bench.run,
+         SMOKE_KWARGS["adapt_bench"] if quick else {}),
     ]
     print("name,us_per_call,derived")
     for name, fn, kwargs in suites:

@@ -266,6 +266,41 @@ def layer_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
     return kern + h2d + d2h
 
 
+def segment_times_from_split(
+    segments, kernels, boundaries
+) -> tuple:
+    """Seconds per segment for a configuration's kernel/boundary split
+    — the per-segment generalization of the host/device stage split.
+
+    ``segments`` is any sequence of objects with ``start``/``stop``/
+    ``on_device`` (``repro.core.mapper.Segment`` duck-typed, so this
+    module stays import-free of the mapper); ``kernels``/``boundaries``
+    are the per-layer attributions.  Pricing matches the segment
+    executor: a device segment charges boundary only on its edge layers
+    (for ``policy="dp"`` attributions interior boundaries are zero
+    anyway; for greedy ones the interior roundtrips the executor elides
+    are dropped here too), host segments charge every layer's stored
+    boundary (zero for CPU placements by construction).
+
+    These predictions are what the adaptive runtime's
+    ``DriftDetector`` compares live telemetry against
+    (``repro.adapt``), and what ``EfficientConfiguration.stage_times``
+    aggregates into the two pipeline stages.
+    """
+    out = []
+    for seg in segments:
+        t = 0.0
+        for i in range(seg.start, seg.stop):
+            t += kernels[i]
+            if seg.on_device:
+                if i in (seg.start, seg.stop - 1):
+                    t += boundaries[i]
+            else:
+                t += boundaries[i]
+        out.append(t)
+    return tuple(out)
+
+
 def pipeline_makespan(
     host_s: float, device_s: float, n_microbatches: int
 ) -> float:

@@ -151,6 +151,24 @@ class EfficientConfiguration:
         the schedule the serving runtime executes."""
         return segments_of(self.layer_configs)
 
+    def segment_expected_times(self) -> tuple:
+        """Seconds/example per segment under the segment executor
+        (``cost_model.segment_times_from_split``), aligned with
+        :meth:`segments` — the per-segment predictions the adaptive
+        runtime's drift detector compares live telemetry against.
+
+        Requires the kernel/boundary split; a legacy configuration
+        without it attributes everything to per_layer_times with zero
+        boundary, which is still a valid split for the estimate.
+        """
+        from repro.core.cost_model import segment_times_from_split
+
+        kernels = self.per_layer_kernel_times or self.per_layer_times
+        boundaries = self.per_layer_boundary_times or (0.0,) * len(
+            self.per_layer_times
+        )
+        return segment_times_from_split(self.segments(), kernels, boundaries)
+
     def stage_times(self) -> tuple:
         """(host_s, device_s) per example: total time this
         configuration spends in host-placed vs device-placed segments,
@@ -165,25 +183,13 @@ class EfficientConfiguration:
         charges remain a modest upper bound (an entry layer's stored
         boundary includes a d2h the segment executor elides, and vice
         versa at exit).
-
-        Requires the kernel/boundary split; a legacy configuration
-        without it attributes everything to per_layer_times with zero
-        boundary, which is still a valid split for the estimate.
         """
-        kernels = self.per_layer_kernel_times or self.per_layer_times
-        boundaries = self.per_layer_boundary_times or (0.0,) * len(
-            self.per_layer_times
-        )
         host = device = 0.0
-        for seg in self.segments():
-            for i in range(seg.start, seg.stop):
-                t = kernels[i]
-                if seg.on_device:
-                    if i in (seg.start, seg.stop - 1):
-                        t += boundaries[i]
-                    device += t
-                else:
-                    host += t + boundaries[i]
+        for seg, t in zip(self.segments(), self.segment_expected_times()):
+            if seg.on_device:
+                device += t
+            else:
+                host += t
         return host, device
 
     def pipelined_expected_time(self, n_microbatches: int) -> float:
@@ -365,6 +371,7 @@ def map_efficient_configuration(
     *,
     configs: Sequence[str] | None = None,
     policy: str = "greedy",
+    batch_sizes: Sequence[int] | None = None,
 ) -> EfficientConfiguration:
     """Map every layer to an implementation and pick the proper batch.
 
@@ -378,16 +385,34 @@ def map_efficient_configuration(
     restricts the search (e.g. ``configs=CONFIGS`` prices the paper's
     fixed-8 space on an autotuned table for apples-to-apples
     comparison).
+
+    ``batch_sizes=None`` sweeps every profiled batch size; an explicit
+    subset restricts the sweep — the adaptive runtime remaps at the
+    batch size the engine is already serving, so the swapped-in
+    configuration keeps the batcher's padding targets valid.
     """
     if policy not in POLICIES:
         raise ValueError(
             f"unknown mapping policy {policy!r}; expected one of {POLICIES}"
         )
+    if batch_sizes is None:
+        batch_sizes = table.batch_sizes
+    else:
+        missing = tuple(
+            b for b in batch_sizes if b not in table.batch_sizes
+        )
+        if missing:
+            raise ValueError(
+                f"batch sizes {missing} not profiled "
+                f"(have {table.batch_sizes})"
+            )
+        if not batch_sizes:
+            raise ValueError("batch_sizes must be non-empty when given")
     result_time = float("inf")          # line 2
     proper_batch = None                 # line 1
     best_mapping: list = []
 
-    for batch in table.batch_sizes:     # line 3
+    for batch in batch_sizes:           # line 3
         if policy == "greedy":
             total, mapping = _greedy_for_batch(table, batch, configs)
         else:

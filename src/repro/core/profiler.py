@@ -46,6 +46,7 @@ cannot run.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Callable, Sequence
 
@@ -111,6 +112,71 @@ class ProfileTable:
         if is_host_config(config):
             return 0.0
         return self.h2d(batch, layer) + self.d2h(batch, layer)
+
+    # -- JSON round-trip (mirrors the EfficientConfiguration
+    #    conventions: versioned schema, legacy-tolerant loader) -------
+    SCHEMA_VERSION = 1
+
+    def to_json(self) -> str:
+        """Serialize the table, kernel/boundary split included when
+        present.  Batch keys are stringified (JSON object keys);
+        :meth:`from_json` restores them to ints."""
+
+        def by_batch(d):
+            return (
+                None if d is None else {str(b): d[b] for b in sorted(d)}
+            )
+
+        return json.dumps(
+            {
+                "schema": self.SCHEMA_VERSION,
+                "kind": "profile_table",
+                "model": self.model_name,
+                "batch_sizes": list(self.batch_sizes),
+                "layer_labels": list(self.layer_labels),
+                "times": by_batch(self.times),
+                "kernel_times": by_batch(self.kernel_times),
+                "h2d_times": by_batch(self.h2d_times),
+                "d2h_times": by_batch(self.d2h_times),
+            },
+            indent=2,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "ProfileTable":
+        """Inverse of :meth:`to_json`.  Legacy-tolerant: a document
+        without the ``schema``/``kind`` envelope (or without the
+        kernel/boundary split fields) still loads — missing split
+        components degrade exactly like a pre-split in-memory table
+        (kernel == total, boundary == 0).  A document from a *newer*
+        schema than this code understands is refused rather than
+        silently misread."""
+        d = json.loads(s)
+        schema = d.get("schema", 1)
+        if schema > ProfileTable.SCHEMA_VERSION:
+            raise ValueError(
+                f"profile_table schema {schema} is newer than supported "
+                f"({ProfileTable.SCHEMA_VERSION}); upgrade the loader"
+            )
+        kind = d.get("kind", "profile_table")
+        if kind != "profile_table":
+            raise ValueError(f"expected a profile_table document, got {kind!r}")
+
+        def by_batch(key):
+            raw = d.get(key)
+            return (
+                None if raw is None else {int(b): raw[b] for b in raw}
+            )
+
+        return ProfileTable(
+            model_name=d["model"],
+            batch_sizes=tuple(int(b) for b in d["batch_sizes"]),
+            layer_labels=tuple(d["layer_labels"]),
+            times=by_batch("times"),
+            kernel_times=by_batch("kernel_times"),
+            h2d_times=by_batch("h2d_times"),
+            d2h_times=by_batch("d2h_times"),
+        )
 
 
 def _timeit(fn: Callable[[], object], repeats: int) -> float:

@@ -7,12 +7,131 @@ hypothesis -> change -> before -> after (EXPERIMENTS.md §Perf).
 
     PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen
     PYTHONPATH=src python -m repro.launch.hillclimb --all
+
+Also hosts the BNN *mapping* hillclimb (``--bnn`` /
+:func:`bnn_mapping_hillclimb`): local search over per-layer
+implementations whose move space is each profile row's own candidate
+set — the kernel-variant registry's variable-size per-layer spaces the
+DP mapper searches — not the hard-coded fixed 8.
 """
 
 import argparse
 import dataclasses
 import json
 from pathlib import Path
+
+
+def _fused_total(table, batch, mapping) -> float:
+    from repro.core.mapper import attribute_fused_costs
+
+    kernels, boundaries = attribute_fused_costs(table, batch, mapping)
+    return sum(kernels) + sum(boundaries)
+
+
+def bnn_mapping_hillclimb(
+    table, *, batch=None, start=None, max_sweeps: int = 50
+):
+    """First-improvement hillclimb over per-layer configs under the
+    fused cost model (the DP's objective).
+
+    The move space for layer *i* at batch *b* is
+    ``table.configs_for(b, i)`` — the row's own registry-driven
+    candidate set, so autotuned tables (``xla_fused``, Pallas tile
+    variants, custom registrations) are climbed over their full
+    variable-size spaces; nothing assumes the paper's fixed 8.
+
+    ``start=None`` seeds each batch's climb from the paper's greedy
+    per-layer argmin.  Sweeps layers repeatedly until a full sweep
+    finds no improving move (or ``max_sweeps``), then returns
+    ``(EfficientConfiguration, trajectory)`` for the best batch size,
+    where ``trajectory`` is the accepted-total series (before -> after
+    per accepted move).  The DP is exact for this objective, so the
+    result is sandwiched: DP total <= hillclimb total <= start total
+    (asserted in tests/test_adapt.py).
+    """
+    from repro.core.mapper import configuration_from_mapping
+
+    batches = table.batch_sizes if batch is None else (batch,)
+    best = None                      # (total, batch, mapping, trajectory)
+    n_layers = len(table.layer_labels)
+    for b in batches:
+        if start is None:
+            mapping = [
+                min(
+                    table.configs_for(b, i),
+                    key=lambda c: table.times[b][i][c],
+                )
+                for i in range(n_layers)
+            ]
+        else:
+            mapping = list(start)
+        total = _fused_total(table, b, mapping)
+        trajectory = [total]
+        for _ in range(max_sweeps):
+            improved = False
+            for i in range(n_layers):
+                for cand in table.configs_for(b, i):
+                    if cand == mapping[i]:
+                        continue
+                    prev = mapping[i]
+                    mapping[i] = cand
+                    t = _fused_total(table, b, mapping)
+                    if t < total:
+                        total = t
+                        trajectory.append(t)
+                        improved = True
+                    else:
+                        mapping[i] = prev
+            if not improved:
+                break
+        if best is None or total < best[0]:
+            best = (total, b, tuple(mapping), trajectory)
+    total, b, mapping, trajectory = best
+    return configuration_from_mapping(table, b, mapping), trajectory
+
+
+def run_bnn(outdir: Path):
+    """Hillclimb a BNN mapping on an autotuned (registry-space) profile
+    and log it against the exact DP on the same table."""
+    import jax
+
+    from repro.bnn import build_model
+    from repro.bnn.models import pack_params
+    from repro.core.mapper import map_efficient_configuration
+    from repro.core.profiler import autotune_bnn_model
+
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = autotune_bnn_model(
+        m, packed, batch_sizes=(1, 4, 16), time_source="analytic"
+    )
+    ec_hc, trajectory = bnn_mapping_hillclimb(table)
+    ec_dp = map_efficient_configuration(table, policy="dp")
+    space = sum(
+        len(table.configs_for(ec_hc.proper_batch_size, i))
+        for i in range(len(table.layer_labels))
+    )
+    print(f"\n=== bnn-mapping hillclimb: {m.name} (autotuned space) ===")
+    print(f"  space: {space} summed per-layer candidates "
+          f"(registry-driven, variable-size)")
+    print(f"  start  {trajectory[0] * 1e6:9.2f} us/ex "
+          f"(greedy argmin seed)")
+    print(f"  climb  {ec_hc.expected_time_per_example * 1e6:9.2f} us/ex "
+          f"@b{ec_hc.proper_batch_size} "
+          f"({len(trajectory) - 1} accepted moves)")
+    print(f"  dp     {ec_dp.expected_time_per_example * 1e6:9.2f} us/ex "
+          f"@b{ec_dp.proper_batch_size} (exact)")
+    fp = outdir / "bnn_mapping_hillclimb.json"
+    fp.write_text(json.dumps({
+        "model": m.name,
+        "space": space,
+        "trajectory_us": [t * 1e6 for t in trajectory],
+        "hillclimb_us": ec_hc.expected_time_per_example * 1e6,
+        "hillclimb_mapping": list(ec_hc.layer_configs),
+        "dp_us": ec_dp.expected_time_per_example * 1e6,
+        "dp_mapping": list(ec_dp.layer_configs),
+    }, indent=2))
+    print(f"  wrote {fp}")
 
 from repro import configs as C
 from repro.launch import hlo_analysis as H
@@ -208,10 +327,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", choices=tuple(CELLS) + ("all",),
                     default="all")
+    ap.add_argument("--bnn", action="store_true",
+                    help="hillclimb a BNN layer mapping over the "
+                         "registry candidate space instead of the LM "
+                         "scheme cells")
     ap.add_argument("--out", default="results/hillclimb")
     args = ap.parse_args()
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
+    if args.bnn:
+        run_bnn(outdir)
+        return
     cells = tuple(CELLS) if args.cell == "all" else (args.cell,)
     for key in cells:
         run_cell(key, outdir)

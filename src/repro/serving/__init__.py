@@ -9,7 +9,10 @@ paper's cost model assumes.
   with max-batch / max-wait knobs and padding to profiled batch sizes
   so the ProfileTable entries stay valid.
 * :mod:`engine` — :class:`ServingEngine`: the front end gluing the
-  two together behind ``submit()`` / ``step()``.
+  two together behind ``submit()`` / ``step()``, with atomic
+  batch-boundary configuration hot-swap (``swap_configuration``) and
+  an optional telemetry observer — the attachment points the adaptive
+  runtime (``repro.adapt``) drives.
 """
 
 from repro.serving.batcher import MicroBatch, MicroBatcher, Request, pad_to

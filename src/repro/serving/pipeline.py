@@ -30,10 +30,23 @@ real accelerator backend.
 
 All arithmetic is int32/bool, so pipelined, serial, and fused
 execution are bit-exact for the same inputs.
+
+**Telemetry hook.**  Both drivers accept an ``observer`` — a callable
+``observer(seg_index, segment, seconds, batch)`` fired once per
+(micro-batch, segment) execution with the segment's wall time for a
+``batch``-row micro-batch.  With ``observer=None`` (the default) the
+drivers are exactly the un-instrumented code paths — zero overhead.
+When observing, the pipelined driver must block on each device
+segment's output to read a true wall time, which serializes that
+wave's device/host overlap; the adaptive runtime
+(``repro.adapt.SegmentTelemetry``) therefore *samples* — it hands an
+observer to only every k-th step — so steady-state throughput keeps
+the overlap.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -79,9 +92,11 @@ class SegmentPipeline:
 
     # -- serial reference: one micro-batch at a time, Python thread
     #    blocks at every segment boundary (no overlap) ---------------
-    def run_serial(self, x_words) -> np.ndarray:
+    def run_serial(self, x_words, *, observer: Callable | None = None):
         x = np.asarray(x_words)
-        for seg, fn in self.segment_fns:
+        batch = x.shape[0]
+        for s, (seg, fn) in enumerate(self.segment_fns):
+            t0 = time.perf_counter() if observer is not None else 0.0
             if seg.on_device:
                 out = fn(jax.device_put(x, self.device))
                 jax.block_until_ready(out)
@@ -90,6 +105,8 @@ class SegmentPipeline:
                 out = fn(x)
                 jax.block_until_ready(out)
                 x = out
+            if observer is not None:
+                observer(s, seg, time.perf_counter() - t0, batch)
         return np.asarray(x)
 
     # -- pipelined driver over a micro-batch stream ------------------
@@ -98,6 +115,7 @@ class SegmentPipeline:
         inputs: Sequence,
         *,
         on_complete: Callable | None = None,
+        observer: Callable | None = None,
     ) -> list:
         """Run `inputs` (a list of micro-batch word arrays) through the
         segment chain with a one-segment-per-wave skew.
@@ -106,6 +124,12 @@ class SegmentPipeline:
         output is materialized on the host — the per-micro-batch
         completion point for latency measurement.  Returns outputs in
         input order.
+
+        ``observer(seg_index, segment, seconds, batch)`` fires per
+        (micro-batch, segment) with the segment's wall time.  Observing
+        blocks on device-segment outputs (a true wall time needs a
+        sync), trading that wave's overlap for measurement — pass an
+        observer only on sampled steps (module docstring).
         """
         segs = self.segment_fns
         k, n = len(segs), len(inputs)
@@ -141,7 +165,16 @@ class SegmentPipeline:
                     staged[i] = None        # keep only ~2 live buffers
                     if not isinstance(x, jax.Array):
                         x = jax.device_put(x, self.device)
-                    state[i] = fn(x)
+                    if observer is None:
+                        state[i] = fn(x)
+                    else:
+                        t0 = time.perf_counter()
+                        out = fn(x)
+                        jax.block_until_ready(out)
+                        observer(
+                            s, seg, time.perf_counter() - t0, x.shape[0]
+                        )
+                        state[i] = out
             # host advances: np.asarray is the deferred D2H sync on the
             # previous wave's device output
             for i, s in active:
@@ -149,7 +182,20 @@ class SegmentPipeline:
                 if not seg.on_device:
                     x = staged[i] if s == 0 else state[i]
                     staged[i] = None
-                    state[i] = fn(np.asarray(x))
+                    if observer is None:
+                        state[i] = fn(np.asarray(x))
+                    else:
+                        # timing includes the deferred D2H sync of the
+                        # upstream device output — the host stage pays
+                        # it in the un-instrumented driver too
+                        t0 = time.perf_counter()
+                        xh = np.asarray(x)
+                        out = fn(xh)
+                        jax.block_until_ready(out)
+                        observer(
+                            s, seg, time.perf_counter() - t0, xh.shape[0]
+                        )
+                        state[i] = out
             # completions: micro-batch i leaves the pipeline
             for i, s in active:
                 if s == k - 1:

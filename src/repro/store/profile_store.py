@@ -1,0 +1,393 @@
+"""Persistent profile/mapping store — profile once, adapt forever.
+
+The paper's pipeline re-profiles every platform from scratch on every
+run.  :class:`ProfileStore` makes the expensive artifacts — the
+:class:`~repro.core.profiler.ProfileTable` a sweep produced and the
+:class:`~repro.core.mapper.EfficientConfiguration` the mapper chose —
+first-class, persisted, *keyed* documents, so a serving process warm
+starts: load the stored mapping, serve immediately, and let the
+adaptive runtime (``repro.adapt``) correct it online.  The
+``RemapController`` writes its remapped *configurations* back, so the
+next process warm-starts from the adapted mapping.  Corrected tables
+are deliberately **not** persisted: they encode observed — possibly
+transient — conditions, and a placement the remap abandoned can never
+be re-observed to recover, so the factory profile on disk stays
+authoritative (one contention episode must not poison warm starts
+forever).
+
+**Key.**  An artifact is valid only for the platform, model, batch
+sizes and kernel space it was measured under, so entries are keyed by
+
+* ``hardware_fingerprint()`` — host platform/processor/core-count plus
+  the JAX backend and device kind (a profile from machine A must never
+  warm-start machine B);
+* ``model_signature(model)`` — model name + the per-layer labels the
+  profiler emits (a resized or re-architected model re-profiles);
+* the profiled ``batch_sizes`` (profiles) / serving batch (mappings);
+* ``registry_hash()`` — the kernel-variant registry's names and
+  pricing metadata (registering a new variant invalidates nothing, it
+  just keys new entries; *changing* a variant's semantics re-keys).
+
+**Layout.**  ``root/v<schema>/<fingerprint>/<model>-r<registry>/`` with
+one JSON document per artifact (``profile-b<sizes>.json``,
+``mapping-<policy>-b<batch>.json``), each wrapped in a versioned
+envelope (schema, kind, saved_at, full key) around the payload's own
+versioned JSON (``ProfileTable.to_json`` /
+``EfficientConfiguration.to_json``).  Loaders verify the envelope key
+before trusting a payload; unknown newer schemas are refused, not
+misread.  ``tools/profile_store.py`` gives ``inspect`` / ``gc`` /
+``export`` over the same layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from typing import Callable, Sequence
+
+from repro.core.mapper import EfficientConfiguration
+from repro.core.profiler import ProfileTable
+
+SCHEMA_VERSION = 1
+
+
+def _digest(parts) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(repr(p).encode())
+        h.update(b"\x00")
+    return h.hexdigest()[:12]
+
+
+def hardware_fingerprint() -> str:
+    """Short stable hash of the serving platform: host CPU identity and
+    core count plus the JAX backend and device kind.  Deliberately
+    excludes load/clock state — that is what telemetry tracks."""
+    import jax
+
+    dev = jax.devices()[0]
+    return _digest(
+        (
+            platform.system(),
+            platform.machine(),
+            platform.processor(),
+            os.cpu_count(),
+            jax.default_backend(),
+            getattr(dev, "device_kind", type(dev).__name__),
+        )
+    )
+
+
+def model_signature(model) -> str:
+    """Hash of the model's name + per-layer labels — exactly the labels
+    a ProfileTable for it carries, so table and model key identically."""
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
+    return signature_from_labels(model.name, labels)
+
+
+def signature_from_labels(model_name: str, layer_labels) -> str:
+    return _digest((model_name,) + tuple(layer_labels))
+
+
+def registry_hash(registry=None) -> str:
+    """Hash of the kernel-variant space: every registered name with its
+    placement and pricing metadata, order-independent."""
+    if registry is None:
+        from repro.kernels.registry import DEFAULT_REGISTRY
+
+        registry = DEFAULT_REGISTRY
+    rows = sorted(
+        (v.name, v.placement, tuple(v.aspects), v.p_blk, v.n_blk, v.analytic)
+        for v in registry
+    )
+    return _digest(rows)
+
+
+def _batch_key(batch_sizes: Sequence[int]) -> str:
+    # canonicalized: (4, 1) and (1, 4) are the same profiled set
+    return "x".join(str(int(b)) for b in sorted(batch_sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreEntry:
+    """One artifact on disk, as ``inspect`` reports it."""
+
+    path: Path
+    kind: str
+    schema: int
+    saved_at: float
+    key: dict
+    size_bytes: int
+
+    @property
+    def age_s(self) -> float:
+        return max(0.0, time.time() - self.saved_at)
+
+
+class ProfileStore:
+    def __init__(self, root, *, fingerprint: str | None = None, registry=None):
+        self.root = Path(root)
+        self._fingerprint = fingerprint
+        self._registry = registry
+        self._registry_hash: str | None = None
+
+    # -- keys --------------------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        if self._fingerprint is None:
+            self._fingerprint = hardware_fingerprint()
+        return self._fingerprint
+
+    @property
+    def space_hash(self) -> str:
+        if self._registry_hash is None:
+            self._registry_hash = registry_hash(self._registry)
+        return self._registry_hash
+
+    def _dir(self, model_sig: str) -> Path:
+        return (
+            self.root
+            / f"v{SCHEMA_VERSION}"
+            / self.fingerprint
+            / f"{model_sig}-r{self.space_hash}"
+        )
+
+    def profile_path(self, model_sig: str, batch_sizes) -> Path:
+        return self._dir(model_sig) / f"profile-b{_batch_key(batch_sizes)}.json"
+
+    def mapping_path(self, model_sig: str, policy: str, batch: int) -> Path:
+        return self._dir(model_sig) / f"mapping-{policy}-b{int(batch)}.json"
+
+    # -- envelope ----------------------------------------------------
+    def _envelope(self, kind: str, key: dict, payload: dict) -> str:
+        return json.dumps(
+            {
+                "schema": SCHEMA_VERSION,
+                "kind": kind,
+                "saved_at": time.time(),
+                "key": {
+                    "fingerprint": self.fingerprint,
+                    "registry": self.space_hash,
+                    **key,
+                },
+                "payload": payload,
+            },
+            indent=2,
+        )
+
+    def _open(self, path: Path, kind: str) -> dict | None:
+        """Parse + verify an envelope; None when absent or keyed for a
+        different platform/registry (never served cross-key)."""
+        if not path.exists():
+            return None
+        doc = json.loads(path.read_text())
+        if doc.get("schema", 0) > SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: store schema {doc.get('schema')} is newer than "
+                f"supported ({SCHEMA_VERSION}); upgrade the loader"
+            )
+        if doc.get("kind") != kind:
+            return None
+        key = doc.get("key", {})
+        if key.get("fingerprint") != self.fingerprint:
+            return None
+        if key.get("registry") != self.space_hash:
+            return None
+        return doc
+
+    # -- profiles ----------------------------------------------------
+    def save_profile(self, table: ProfileTable) -> Path:
+        sig = signature_from_labels(table.model_name, table.layer_labels)
+        path = self.profile_path(sig, table.batch_sizes)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = self._envelope(
+            "profile_table",
+            {
+                "model": sig,
+                "model_name": table.model_name,
+                "batch_sizes": list(table.batch_sizes),
+            },
+            json.loads(table.to_json()),
+        )
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(doc)
+        os.replace(tmp, path)            # readers never see a torn file
+        return path
+
+    def load_profile(
+        self, model, batch_sizes: Sequence[int]
+    ) -> ProfileTable | None:
+        sig = model_signature(model)
+        doc = self._open(
+            self.profile_path(sig, batch_sizes), "profile_table"
+        )
+        if doc is None:
+            return None
+        return ProfileTable.from_json(json.dumps(doc["payload"]))
+
+    def get_or_profile(
+        self,
+        model,
+        packed_params,
+        profile_fn: Callable,
+        *,
+        batch_sizes: Sequence[int],
+    ) -> tuple:
+        """(table, loaded): the stored profile when one matches the
+        key, else ``profile_fn(model, packed_params,
+        batch_sizes=batch_sizes)`` — run, saved, and returned.  The
+        warm-start contract: a hit performs **zero** profiling."""
+        table = self.load_profile(model, batch_sizes)
+        if table is not None:
+            return table, True
+        table = profile_fn(model, packed_params, batch_sizes=batch_sizes)
+        self.save_profile(table)
+        return table, False
+
+    # -- mappings ----------------------------------------------------
+    def save_mapping(self, config: EfficientConfiguration) -> Path:
+        sig = signature_from_labels(config.model_name, config.layer_labels)
+        path = self.mapping_path(
+            sig, config.policy, config.proper_batch_size
+        )
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = self._envelope(
+            "efficient_configuration",
+            {
+                "model": sig,
+                "model_name": config.model_name,
+                "batch": config.proper_batch_size,
+                "policy": config.policy,
+            },
+            json.loads(config.to_json()),
+        )
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(doc)
+        os.replace(tmp, path)
+        return path
+
+    def load_mapping(
+        self, model, *, policy: str = "dp", batch: int | None = None
+    ) -> EfficientConfiguration | None:
+        """The stored mapping for (platform, model, registry) —
+        at `batch` when given, else the most recently saved one for
+        `policy`."""
+        sig = model_signature(model)
+        if batch is not None:
+            paths = [self.mapping_path(sig, policy, batch)]
+        else:
+            paths = sorted(
+                self._dir(sig).glob(f"mapping-{policy}-b*.json"),
+                key=lambda p: p.stat().st_mtime,
+                reverse=True,
+            ) if self._dir(sig).exists() else []
+        for path in paths:
+            doc = self._open(path, "efficient_configuration")
+            if doc is not None:
+                return EfficientConfiguration.from_json(
+                    json.dumps(doc["payload"])
+                )
+        return None
+
+    def warm_start(
+        self,
+        model,
+        *,
+        batch_sizes: Sequence[int],
+        policy: str = "dp",
+    ) -> tuple | None:
+        """(table, config) for an immediate serve with no profiling
+        pass, or None when this platform has no stored profile.  A
+        missing mapping is re-derived from the stored table (cheap —
+        the sweep, not the solve, is what the store amortizes)."""
+        from repro.core.mapper import map_efficient_configuration
+
+        table = self.load_profile(model, batch_sizes)
+        if table is None:
+            return None
+        config = self.load_mapping(model, policy=policy)
+        if (
+            config is None
+            or config.layer_labels != table.layer_labels
+            # a mapping remapped/saved at a batch this sweep never
+            # profiled cannot be served against this table
+            or config.proper_batch_size not in table.batch_sizes
+        ):
+            config = map_efficient_configuration(table, policy=policy)
+            self.save_mapping(config)
+        return table, config
+
+    # -- maintenance (tools/profile_store.py) ------------------------
+    def entries(self) -> list:
+        """Every parseable artifact under the root, newest first —
+        including other schemas/fingerprints (inspect sees all)."""
+        out = []
+        if not self.root.exists():
+            return out
+        for path in sorted(self.root.rglob("*.json")):
+            try:
+                doc = json.loads(path.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            if "kind" not in doc:
+                continue
+            out.append(
+                StoreEntry(
+                    path=path,
+                    kind=doc.get("kind", "?"),
+                    schema=int(doc.get("schema", 0)),
+                    saved_at=float(doc.get("saved_at", 0.0)),
+                    key=doc.get("key", {}),
+                    size_bytes=path.stat().st_size,
+                )
+            )
+        out.sort(key=lambda e: e.saved_at, reverse=True)
+        return out
+
+    def gc(
+        self, *, max_age_s: float | None = None, dry_run: bool = False
+    ) -> list:
+        """Remove stale artifacts: anything from an older store schema,
+        plus (when ``max_age_s`` is set) current-schema entries older
+        than that.  Returns the removed paths; empty directories are
+        pruned."""
+        removed = []
+        for entry in self.entries():
+            stale = entry.schema < SCHEMA_VERSION or (
+                max_age_s is not None and entry.age_s > max_age_s
+            )
+            if not stale:
+                continue
+            removed.append(entry.path)
+            if not dry_run:
+                entry.path.unlink()
+        if not dry_run and self.root.exists():
+            for d in sorted(
+                (p for p in self.root.rglob("*") if p.is_dir()),
+                key=lambda p: len(p.parts),
+                reverse=True,
+            ):
+                if not any(d.iterdir()):
+                    d.rmdir()
+        return removed
+
+    def export(self) -> dict:
+        """One self-contained bundle of every artifact (portable
+        backup; re-import by writing the files back)."""
+        return {
+            "schema": SCHEMA_VERSION,
+            "kind": "profile_store_export",
+            "exported_at": time.time(),
+            "entries": [
+                {
+                    "path": str(e.path.relative_to(self.root)),
+                    "document": json.loads(e.path.read_text()),
+                }
+                for e in self.entries()
+            ],
+        }

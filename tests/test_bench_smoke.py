@@ -37,6 +37,18 @@ def test_compare_fails_on_regression_over_tolerance():
     assert failures == []
 
 
+def test_compare_skips_functional_rows_but_requires_presence():
+    """us=0 sentinel rows (e.g. adapt_bench) are never timing-gated,
+    but dropping one from the PR run is still a coverage failure."""
+    base = {"adapt/x": {"us": 0.0}, "a": {"us": 100.0}}
+    pr = {"adapt/x": {"us": 0.0}, "a": {"us": 100.0}}
+    failures, notes = compare(pr, base, tolerance=0.25)
+    assert failures == []
+    assert any("functional" in n for n in notes)
+    failures, _ = compare({"a": {"us": 100.0}}, base, tolerance=0.25)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
 def test_compare_fails_on_missing_metric_but_not_new():
     base = {"gone": {"us": 10.0}}
     pr = {"new": {"us": 10.0}}

@@ -1,0 +1,372 @@
+"""Profile store: ProfileTable JSON round-trip (schema-versioned,
+legacy-tolerant), store keying (fingerprint/model/batch/registry),
+warm start with zero profiler invocations, gc/export, and the
+tools/profile_store.py CLI."""
+
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.mapper import (
+    EfficientConfiguration,
+    map_efficient_configuration,
+)
+from repro.core.parallel_config import CONFIGS, CPU
+from repro.core.profiler import ProfileTable
+from repro.kernels.registry import (
+    KernelVariant, VariantRegistry, _register_defaults,
+)
+from repro.serving import ServingEngine
+from repro.store import (
+    ProfileStore,
+    hardware_fingerprint,
+    model_signature,
+    registry_hash,
+    signature_from_labels,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _table(model_name="m", batches=(1, 4), n_layers=3, seed=0):
+    rng = np.random.default_rng(seed)
+    times, kernels, h2d, d2h = {}, {}, {}, {}
+    for b in batches:
+        times[b], kernels[b], h2d[b], d2h[b] = [], [], [], []
+        for _ in range(n_layers):
+            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            up, down = (float(x) for x in rng.uniform(1e-6, 5e-4, 2))
+            kernels[b].append(krow)
+            times[b].append({
+                c: krow[c] if c == CPU else krow[c] + up + down
+                for c in CONFIGS
+            })
+            h2d[b].append(up)
+            d2h[b].append(down)
+    return ProfileTable(
+        model_name, tuple(batches),
+        tuple(f"L{i+1}:C8" for i in range(n_layers)),
+        times, kernel_times=kernels, h2d_times=h2d, d2h_times=d2h,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ProfileTable JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_profile_table_json_roundtrip_exact():
+    t = _table()
+    t2 = ProfileTable.from_json(t.to_json())
+    assert t2.model_name == t.model_name
+    assert t2.batch_sizes == t.batch_sizes          # ints, not strings
+    assert t2.layer_labels == t.layer_labels
+    assert t2.times == t.times
+    assert t2.kernel_times == t.kernel_times
+    assert t2.h2d_times == t.h2d_times
+    assert t2.d2h_times == t.d2h_times
+    doc = json.loads(t.to_json())
+    assert doc["schema"] == ProfileTable.SCHEMA_VERSION
+    assert doc["kind"] == "profile_table"
+
+
+def test_profile_table_json_legacy_tolerant():
+    """A pre-schema document without envelope or split fields loads
+    and degrades exactly like a legacy in-memory table."""
+    legacy = {
+        "model": "m", "batch_sizes": [1],
+        "layer_labels": ["L1:C8"],
+        "times": {"1": [{"CPU": 1.0, "X": 2.0}]},
+    }
+    t = ProfileTable.from_json(json.dumps(legacy))
+    assert t.batch_sizes == (1,)
+    assert t.kernel_time(1, 0, "X") == 2.0          # kernel == total
+    assert t.h2d(1, 0) == 0.0 and t.d2h(1, 0) == 0.0
+    assert t.boundary_time(1, 0, "X") == 0.0
+    # and it re-serializes under the current schema
+    t2 = ProfileTable.from_json(t.to_json())
+    assert t2.times == t.times and t2.kernel_times is None
+
+
+def test_profile_table_json_refuses_newer_schema_and_wrong_kind():
+    doc = json.loads(_table().to_json())
+    doc["schema"] = ProfileTable.SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="newer"):
+        ProfileTable.from_json(json.dumps(doc))
+    doc["schema"] = ProfileTable.SCHEMA_VERSION
+    doc["kind"] = "efficient_configuration"
+    with pytest.raises(ValueError, match="profile_table"):
+        ProfileTable.from_json(json.dumps(doc))
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_and_signatures_are_stable():
+    assert hardware_fingerprint() == hardware_fingerprint()
+    m = build_model("fashion_mnist", scale=0.25)
+    assert model_signature(m) == model_signature(m)
+    t = _table(model_name=m.name)
+    # a table keyed from its own labels matches the model only when
+    # the labels actually match
+    assert signature_from_labels(m.name, t.layer_labels) != (
+        model_signature(m)
+    )
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    assert signature_from_labels(m.name, labels) == model_signature(m)
+
+
+def test_registry_hash_tracks_the_variant_space():
+    base = registry_hash()
+    custom = _register_defaults(VariantRegistry())
+    assert registry_hash(custom) == base        # same space, same key
+    custom.register(KernelVariant(
+        name="my_kernel", builder=lambda a, w, k: a, placement="device",
+    ))
+    assert registry_hash(custom) != base        # new variant re-keys
+
+
+# ---------------------------------------------------------------------------
+# store round trips and isolation
+# ---------------------------------------------------------------------------
+
+
+def test_store_profile_roundtrip_and_cross_fingerprint_isolation(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    a = ProfileStore(tmp_path, fingerprint="machine-a")
+    path = a.save_profile(t)
+    assert path.exists()
+    got = a.load_profile(m, t.batch_sizes)
+    assert got is not None and got.times == t.times
+    # a different platform must never see machine A's profile
+    b = ProfileStore(tmp_path, fingerprint="machine-b")
+    assert b.load_profile(m, t.batch_sizes) is None
+    # nor a different batch-size sweep
+    assert a.load_profile(m, (1, 2)) is None
+
+
+def test_store_batch_key_is_order_insensitive(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    store = ProfileStore(tmp_path, fingerprint="machine-a")
+    store.save_profile(t)                      # batch_sizes (1, 4)
+    got = store.load_profile(m, (4, 1))        # same set, any order
+    assert got is not None and got.times == t.times
+
+
+def test_warm_start_rejects_mapping_from_unprofiled_batch(tmp_path):
+    """A mapping remapped/saved at a batch outside the requested sweep
+    must be re-derived from the table, not served against it."""
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, batches=(1, 4), n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    t16 = _table(model_name=m.name, batches=(16,), n_layers=len(labels))
+    t16 = ProfileTable(
+        m.name, t16.batch_sizes, labels, t16.times,
+        kernel_times=t16.kernel_times, h2d_times=t16.h2d_times,
+        d2h_times=t16.d2h_times,
+    )
+    store = ProfileStore(tmp_path, fingerprint="machine-a")
+    store.save_profile(t)
+    # most recently saved mapping is for batch 16
+    store.save_mapping(map_efficient_configuration(t, policy="dp"))
+    store.save_mapping(map_efficient_configuration(t16, policy="dp"))
+    table, config = store.warm_start(m, batch_sizes=(1, 4))
+    assert config.proper_batch_size in table.batch_sizes
+
+
+def test_store_mapping_roundtrip(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    ec = map_efficient_configuration(t, policy="dp")
+    store = ProfileStore(tmp_path, fingerprint="machine-a")
+    store.save_mapping(ec)
+    got = store.load_mapping(m, policy="dp")
+    assert isinstance(got, EfficientConfiguration)
+    assert got.layer_configs == ec.layer_configs
+    assert got.proper_batch_size == ec.proper_batch_size
+    assert store.load_mapping(m, policy="greedy") is None
+    assert store.load_mapping(
+        m, policy="dp", batch=ec.proper_batch_size
+    ) is not None
+
+
+def test_warm_start_serves_with_zero_profiler_invocations(tmp_path):
+    """The acceptance path: save on machine state A, reload under the
+    same fingerprint, serve — counting profiler invocations."""
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    calls = []
+
+    def fake_profiler(model, packed_params, *, batch_sizes):
+        calls.append(batch_sizes)
+        labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
+        t = _table(model_name=model.name, batches=batch_sizes,
+                   n_layers=len(labels))
+        return ProfileTable(
+            model.name, t.batch_sizes, labels, t.times,
+            kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+            d2h_times=t.d2h_times,
+        )
+
+    store = ProfileStore(tmp_path, fingerprint="machine-a")
+    assert store.warm_start(m, batch_sizes=(1, 4)) is None  # cold
+
+    t1, loaded = store.get_or_profile(
+        m, packed, fake_profiler, batch_sizes=(1, 4)
+    )
+    assert not loaded and len(calls) == 1       # cold start profiles once
+
+    # same fingerprint, fresh process-equivalent: zero further profiling
+    store2 = ProfileStore(tmp_path, fingerprint="machine-a")
+    t2, loaded = store2.get_or_profile(
+        m, packed, fake_profiler, batch_sizes=(1, 4)
+    )
+    assert loaded and len(calls) == 1
+    assert t2.times == t1.times
+
+    warm = store2.warm_start(m, batch_sizes=(1, 4))
+    assert warm is not None and len(calls) == 1
+    table, config = warm
+    # the warm-started configuration serves real traffic correctly
+    engine = ServingEngine(
+        m, packed, config, allowed_batch_sizes=table.batch_sizes
+    )
+    x01 = jax.random.uniform(jax.random.PRNGKey(7), (4, 28, 28, 1))
+    xw = np.asarray(prepare_input_packed(x01))
+    reqs = [engine.submit(xw[i]) for i in range(4)]
+    assert engine.step(force=True) == 4
+    ref = np.asarray(forward_packed(m.specs, packed, xw))
+    for i, r in enumerate(reqs):
+        assert np.array_equal(r.wait(timeout=5.0), ref[i])
+    # the derived mapping was persisted: next warm start loads it as-is
+    assert store2.load_mapping(m, policy="dp") is not None
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# maintenance: entries / gc / export
+# ---------------------------------------------------------------------------
+
+
+def _seeded_store(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    store = ProfileStore(tmp_path, fingerprint="machine-a")
+    store.save_profile(t)
+    store.save_mapping(map_efficient_configuration(t, policy="dp"))
+    return store, m, t
+
+
+def test_entries_gc_and_export(tmp_path):
+    store, _, _ = _seeded_store(tmp_path)
+    entries = store.entries()
+    assert {e.kind for e in entries} == {
+        "profile_table", "efficient_configuration"
+    }
+    # plant a stale old-schema artifact
+    old = tmp_path / "v0" / "machine-a" / "x" / "profile-b1.json"
+    old.parent.mkdir(parents=True)
+    old.write_text(json.dumps({
+        "schema": 0, "kind": "profile_table",
+        "saved_at": time.time() - 1e6, "key": {}, "payload": {},
+    }))
+    assert len(store.entries()) == 3
+    planned = store.gc(dry_run=True)
+    assert planned == [old] and old.exists()    # dry run plans only
+    removed = store.gc()
+    assert removed == [old] and not old.exists()
+    assert not (tmp_path / "v0").exists()       # empty dirs pruned
+    # age-based gc takes the rest
+    assert len(store.gc(max_age_s=0.0)) == 2
+    assert store.entries() == []
+    # export is a self-contained bundle
+    store2, _, _ = _seeded_store(tmp_path)
+    bundle = store2.export()
+    assert bundle["kind"] == "profile_store_export"
+    assert len(bundle["entries"]) == 2
+    for e in bundle["entries"]:
+        assert "payload" in e["document"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "profile_store.py"), *args],
+        capture_output=True, text=True, env=env,
+    )
+
+
+def test_cli_inspect_gc_export(tmp_path):
+    _seeded_store(tmp_path)
+    out = _cli("inspect", "--root", str(tmp_path))
+    assert out.returncode == 0, out.stderr
+    assert "profile_table" in out.stdout
+    assert "efficient_configuration" in out.stdout
+
+    export_path = tmp_path / "bundle.json"
+    out = _cli("export", "--root", str(tmp_path), "--out", str(export_path))
+    assert out.returncode == 0, out.stderr
+    bundle = json.loads(export_path.read_text())
+    assert len(bundle["entries"]) == 2
+
+    # preview and delete are mutually exclusive modes
+    out = _cli("gc", "--root", str(tmp_path), "--dry-run", "--yes")
+    assert out.returncode != 0
+    out = _cli("gc", "--root", str(tmp_path), "--max-age-days", "0",
+               "--yes")
+    assert out.returncode == 0, out.stderr
+    out = _cli("inspect", "--root", str(tmp_path))
+    assert out.returncode == 0
+    assert "0 entries" in out.stdout

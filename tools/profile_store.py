@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Operate on a ProfileStore from the command line.
+
+    python tools/profile_store.py inspect [--root DIR]
+    python tools/profile_store.py gc      [--root DIR] [--max-age-days D]
+                                          [--dry-run | --yes]
+    python tools/profile_store.py export  [--root DIR] [--out FILE]
+
+``inspect`` lists every artifact with its key (fingerprint, model,
+registry hash), schema, age and size.  ``gc`` removes artifacts from
+older store schemas plus, with ``--max-age-days``, anything older than
+that; it previews by default and deletes only with ``--yes``.
+``export`` writes the whole store as one self-contained JSON bundle.
+
+The store layout and keying are documented in
+``src/repro/store/profile_store.py`` / docs/ARCHITECTURE.md §9.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_ROOT = Path("results/profile_store")
+
+
+def _store(root: Path):
+    # deferred: repro.store pulls in jax via the core modules
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro.store import ProfileStore
+
+    return ProfileStore(root)
+
+
+def _fmt_age(age_s: float) -> str:
+    if age_s < 120:
+        return f"{age_s:.0f}s"
+    if age_s < 7200:
+        return f"{age_s / 60:.0f}m"
+    if age_s < 2 * 86400:
+        return f"{age_s / 3600:.1f}h"
+    return f"{age_s / 86400:.1f}d"
+
+
+def cmd_inspect(args) -> int:
+    store = _store(args.root)
+    entries = store.entries()
+    for e in entries:
+        key = e.key
+        print(
+            f"{e.kind:24s} v{e.schema}  {_fmt_age(e.age_s):>6s}  "
+            f"{e.size_bytes:>8d}B  "
+            f"fp={key.get('fingerprint', '?')}  "
+            f"model={key.get('model_name', key.get('model', '?'))}  "
+            f"r={key.get('registry', '?')}  "
+            f"{e.path.relative_to(args.root)}"
+        )
+    print(f"{len(entries)} entries under {args.root}")
+    return 0
+
+
+def cmd_gc(args) -> int:
+    store = _store(args.root)
+    max_age_s = (
+        None if args.max_age_days is None
+        else args.max_age_days * 86400.0
+    )
+    dry = not args.yes
+    removed = store.gc(max_age_s=max_age_s, dry_run=dry)
+    verb = "would remove" if dry else "removed"
+    for p in removed:
+        print(f"{verb} {p}")
+    print(f"{verb} {len(removed)} artifacts"
+          + ("" if args.yes else " (pass --yes to delete)"))
+    return 0
+
+
+def cmd_export(args) -> int:
+    store = _store(args.root)
+    bundle = store.export()
+    text = json.dumps(bundle, indent=2) + "\n"
+    if args.out is None:
+        sys.stdout.write(text)
+    else:
+        args.out.write_text(text)
+        print(f"wrote {args.out} ({len(bundle['entries'])} entries)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def add(name, help_):
+        p = sub.add_parser(name, help=help_)
+        p.add_argument("--root", type=Path, default=DEFAULT_ROOT,
+                       help=f"store root (default: {DEFAULT_ROOT})")
+        return p
+
+    add("inspect", "list every stored artifact")
+    gc = add("gc", "remove stale artifacts")
+    gc.add_argument("--max-age-days", type=float, default=None,
+                    help="also remove current-schema artifacts older "
+                         "than this many days")
+    mode = gc.add_mutually_exclusive_group()
+    mode.add_argument("--dry-run", action="store_true",
+                      help="preview only (the default)")
+    mode.add_argument("--yes", action="store_true",
+                      help="actually delete")
+    ex = add("export", "bundle the store as one JSON")
+    ex.add_argument("--out", type=Path, default=None,
+                    help="output file (default: stdout)")
+    args = ap.parse_args(argv)
+    return {
+        "inspect": cmd_inspect, "gc": cmd_gc, "export": cmd_export,
+    }[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
