@@ -76,7 +76,8 @@ from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
 from repro.core.mapper import map_efficient_configuration
 from repro.core.parallel_config import CPU, FULL_GPU
 from repro.core.profiler import profile_bnn_model
-from repro.serving import ServingEngine
+
+from benchmarks.contention import TaxedEngine, busy_wait
 
 # the near-tied placement pair the experiment searches over (paper
 # Fig. 5's sequential-CPU and fully-parallel baselines)
@@ -86,45 +87,21 @@ SPACE = (CPU, FULL_GPU)
 class Contention:
     """A switchable busy-wait tax per segment execution on one
     placement — the synthetic co-tenant.  Busy-waiting (not sleeping)
-    models a core actually stolen from that processor."""
+    models a core actually stolen from that processor.  Injected via
+    ``benchmarks.contention.TaxedEngine`` (shared with
+    ``fleet_bench``), whose ``_build_pipeline`` wrap makes every
+    pipeline the engine ever builds — including ones hot-swapped in
+    by remaps — pay the tax; escaping it requires actually moving
+    work off the contended processor, which is the thing being
+    measured."""
 
     def __init__(self):
         self.placement: str | None = None     # mapper HOST/DEVICE value
         self.tax_s = 0.0
 
     def apply(self, placement: str):
-        if self.tax_s <= 0.0 or placement != self.placement:
-            return
-        t0 = time.perf_counter()
-        while time.perf_counter() - t0 < self.tax_s:
-            pass
-
-
-class ContendedEngine(ServingEngine):
-    """ServingEngine whose segments pay the contention tax.  The wrap
-    happens in ``_build_pipeline`` so every pipeline the engine ever
-    builds — including the ones hot-swapped in by remaps — runs under
-    the same contention; escaping it requires actually moving work off
-    the contended processor, which is the thing being measured."""
-
-    def __init__(self, *args, contention: Contention, **kwargs):
-        self._contention = contention
-        super().__init__(*args, **kwargs)
-
-    def _build_pipeline(self, config):
-        pipe = super()._build_pipeline(config)
-
-        def taxed(seg, fn):
-            def run(x):
-                self._contention.apply(seg.placement)
-                return fn(x)
-
-            return run
-
-        pipe.segment_fns = [
-            (seg, taxed(seg, fn)) for seg, fn in pipe.segment_fns
-        ]
-        return pipe
+        if placement == self.placement:
+            busy_wait(self.tax_s)
 
 
 class _Traffic:
@@ -194,9 +171,9 @@ def run(
         traffic = _Traffic(m, packed, b)
         contention = Contention()
         telemetry = SegmentTelemetry(alpha=0.5, window=32, sample_every=1)
-        adaptive = ContendedEngine(
+        adaptive = TaxedEngine(
             m, packed, ec0,
-            allowed_batch_sizes=table.batch_sizes, contention=contention,
+            allowed_batch_sizes=table.batch_sizes, tax=contention.apply,
             telemetry=telemetry,
         )
         # rel_threshold matters: a fixed per-segment tax folded into
@@ -224,9 +201,9 @@ def run(
 
         # the frozen engine serves the *calibrated* optimum — the
         # strongest non-adaptive baseline, not the raw-profile mapping
-        frozen = ContendedEngine(
+        frozen = TaxedEngine(
             m, packed, adaptive.config,
-            allowed_batch_sizes=table.batch_sizes, contention=contention,
+            allowed_batch_sizes=table.batch_sizes, tax=contention.apply,
         )
         _serve(frozen, traffic, 0, 2)    # compile
 

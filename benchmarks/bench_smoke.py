@@ -1,17 +1,21 @@
 """CI bench-smoke: tiny-size benchmark run + regression gate.
 
-Runs ``kernel_bench``, ``serve_bench`` and ``adapt_bench`` at CI-sized
-settings (model ``scale=0.25``, batches ``(1, 4)``, one timing
-repeat), writes the results as JSON (the ``BENCH_pr.json`` artifact
-the CI job uploads), and — with ``--check`` — fails when any metric
-regressed by more than the tolerance against a committed baseline
-(``benchmarks/baseline.json``).
+Runs ``kernel_bench``, ``serve_bench``, ``adapt_bench`` and
+``fleet_bench`` at CI-sized settings (model ``scale=0.25``, batches
+``(1, 4)``, one timing repeat), writes the results as JSON (the
+``BENCH_pr.json`` artifact the CI job uploads), and — with
+``--check`` — fails when any metric regressed by more than the
+tolerance against a committed baseline (``benchmarks/baseline.json``).
 
-The adapt rows double as a functional gate: ``adapt_bench`` *asserts*
-that the remap controller converges (first contended remap within its
-batch budget, recovered steady state beating the frozen mapping, all
-outputs bit-exact), so a broken adaptive loop fails the job outright —
-before any timing comparison.
+The adapt and fleet rows double as functional gates: ``adapt_bench``
+*asserts* that the remap controller converges (first contended remap
+within its batch budget, recovered steady state beating the frozen
+mapping, all outputs bit-exact) and ``fleet_bench`` asserts the joint
+mapping's never-worse-than-all-GPU guarantee plus a measured two-model
+co-run makespan win, bit-exact per tenant — so a broken loop fails the
+job outright, before any timing comparison.  Their ``us=0`` sentinel
+rows are coverage-gated (missing from a PR run fails) but not
+timing-gated.
 
 Gate semantics:
 
@@ -67,18 +71,28 @@ SMOKE_KWARGS = {
         "converge_batches": 16,
         "steady_k": 4,
     },
+    "fleet_bench": {
+        "scale": 0.25,
+        "batch": 4,
+        "rounds": 6,
+        "repeats": 1,
+        "profile_repeats": 1,
+    },
 }
 
 
 def collect() -> dict:
     """{metric_name: {"us": float, "derived": str}} over the suites."""
-    from benchmarks import adapt_bench, kernel_bench, serve_bench
+    from benchmarks import (
+        adapt_bench, fleet_bench, kernel_bench, serve_bench,
+    )
 
     metrics: dict = {}
     for name, fn in (
         ("kernel_bench", kernel_bench.run),
         ("serve_bench", serve_bench.run),
         ("adapt_bench", adapt_bench.run),
+        ("fleet_bench", fleet_bench.run),
     ):
         for rname, us, derived in fn(**SMOKE_KWARGS[name]):
             metrics[rname] = {"us": round(float(us), 3), "derived": derived}

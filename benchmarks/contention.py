@@ -1,0 +1,53 @@
+"""Shared contention-injection harness for the adaptive and fleet
+benchmarks.
+
+:class:`TaxedEngine` is a ``ServingEngine`` whose every segment
+execution first calls ``tax(placement)`` — the benchmark's synthetic
+co-tenant hook (a busy-wait stand-in for a stolen core).  The wrap
+happens in ``_build_pipeline`` so every pipeline the engine ever
+builds — including ones hot-swapped in by remaps — runs under the
+same contention; escaping it requires actually moving work off the
+contended processor, which is the thing both benchmarks measure.
+``adapt_bench`` passes a single-placement tax, ``fleet_bench`` binds
+the tax to a tenant whose rate depends on the co-runners' shares.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.serving import ServingEngine
+
+
+def busy_wait(seconds: float) -> None:
+    """Burn the CPU for `seconds` (not sleep: a sleeping co-tenant
+    yields the core back, a real one does not)."""
+    if seconds <= 0.0:
+        return
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        pass
+
+
+class TaxedEngine(ServingEngine):
+    """ServingEngine paying ``tax(placement)`` before every segment."""
+
+    def __init__(self, *args, tax: Callable[[str], None], **kwargs):
+        self._tax = tax
+        super().__init__(*args, **kwargs)
+
+    def _build_pipeline(self, config):
+        pipe = super()._build_pipeline(config)
+
+        def taxed(seg, fn):
+            def run(x):
+                self._tax(seg.placement)
+                return fn(x)
+
+            return run
+
+        pipe.segment_fns = [
+            (seg, taxed(seg, fn)) for seg, fn in pipe.segment_fns
+        ]
+        return pipe

@@ -16,9 +16,13 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   adapt_bench        -> beyond-paper: drift-triggered remapping under
                         injected contention (repro.adapt) — frozen vs
                         adaptive latency, recovery ratio
+  fleet_bench        -> beyond-paper: two-model co-serving
+                        (repro.fleet) — joint contention-aware mapping
+                        vs both-solo-all-GPU, measured co-run makespan
 
 The CI regression gate over the tiny-size variants of kernel_bench,
-serve_bench and adapt_bench lives in ``benchmarks/bench_smoke.py``.
+serve_bench, adapt_bench and fleet_bench lives in
+``benchmarks/bench_smoke.py``.
 """
 
 from __future__ import annotations
@@ -29,8 +33,8 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        adapt_bench, batch_sweep, efficient_configs, kernel_bench,
-        profile_layers, roofline, serve_bench,
+        adapt_bench, batch_sweep, efficient_configs, fleet_bench,
+        kernel_bench, profile_layers, roofline, serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -55,6 +59,8 @@ def main() -> None:
          SMOKE_KWARGS["serve_bench"] if quick else {}),
         ("adapt_bench", adapt_bench.run,
          SMOKE_KWARGS["adapt_bench"] if quick else {}),
+        ("fleet_bench", fleet_bench.run,
+         SMOKE_KWARGS["fleet_bench"] if quick else {}),
     ]
     print("name,us_per_call,derived")
     for name, fn, kwargs in suites:

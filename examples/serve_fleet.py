@@ -1,0 +1,175 @@
+"""Co-serve two BNN models on one platform with a contention-aware
+joint mapping, an SLO router, and a device-time ledger.
+
+The full fleet loop (docs/ARCHITECTURE.md §10):
+
+1. profile both models over the near-tied CPU/XYZ placement pair;
+2. ``map_fleet`` — joint coordinate-descent mapping under the
+   contention-inflation model (never worse than both-solo-all-GPU);
+3. persist the joint mappings in a **fleet-scoped** ``ProfileStore``
+   key (a mapping optimized against these co-runners must not
+   warm-start a solo deployment, or another fleet);
+4. serve interleaved traffic through a ``FleetRouter``: per-tenant
+   priorities and deadlines, admission control shedding requests that
+   would miss their SLO, a shared ``DeviceTimeLedger`` metering who
+   occupied what, and one tenant-named ``RemapController`` per engine
+   (namespaced journals) sharing the fleet store.
+
+Every served response is verified bit-exact against its model's packed
+reference.
+
+    PYTHONPATH=src python examples/serve_fleet.py
+    PYTHONPATH=src python examples/serve_fleet.py --smoke
+"""
+
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.adapt import RemapController, SegmentTelemetry
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.parallel_config import CPU, FULL_GPU
+from repro.core.profiler import profile_bnn_model
+from repro.fleet import DeviceTimeLedger, FleetRouter, map_fleet
+from repro.serving import ServingEngine
+from repro.store import ProfileStore, fleet_scope
+
+SPACE = (CPU, FULL_GPU)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--requests", type=int, default=128,
+                    help="per tenant")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI docs job")
+    args = ap.parse_args()
+    if args.smoke:
+        args.scale, args.requests = 0.25, 32
+
+    names = ("narrow", "wide")
+    tenants = {}
+    tables = []
+    for name, s in zip(names, (args.scale, args.scale * 1.5)):
+        m = build_model("fashion_mnist", scale=s)
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+        table = profile_bnn_model(
+            m, packed, batch_sizes=(args.batch,), configs=SPACE,
+            repeats=1,
+        )
+        tenants[name] = (m, packed, table)
+        tables.append(table)
+
+    plan = map_fleet(
+        tables, names=names, configs=SPACE,
+        batch_sizes=(args.batch,), gamma=2.0,
+    )
+    print(
+        f"joint plan: makespan {plan.joint_makespan_s * 1e6:.0f}us "
+        f"vs all-GPU {plan.baseline_makespan_s * 1e6:.0f}us "
+        f"({plan.vs_all_gpu:.2f}x, {plan.rounds} descent rounds)"
+    )
+    for t in plan.tenants:
+        segs = t.config.segments()
+        print(
+            f"  {t.name}: "
+            + " ".join(f"[{s.placement[0].upper()}x{len(s)}]"
+                       for s in segs)
+            + f" infl(host={t.host_inflation:.2f}, "
+            f"dev={t.device_inflation:.2f})"
+        )
+
+    # fleet-scoped persistence: these mappings key under this exact
+    # co-tenancy — a solo warm start can never pick them up
+    store = ProfileStore(
+        tempfile.mkdtemp(prefix="fleet_store_"),
+        scope=fleet_scope(names),
+    )
+    for name, t in zip(names, plan.tenants):
+        store.save_mapping(t.config)
+    print(f"persisted joint mappings under scope {store.scope}")
+
+    ledger = DeviceTimeLedger()
+    router = FleetRouter(ledger=ledger)
+    step_s = {
+        name: t.config.expected_time_per_example
+        * t.config.proper_batch_size
+        for name, t in zip(names, plan.tenants)
+    }
+    for name, t in zip(names, plan.tenants):
+        m, packed, table = tenants[name]
+        telemetry = SegmentTelemetry(sample_every=2, tenant=name)
+        engine = ServingEngine(
+            m, packed, t.config,
+            allowed_batch_sizes=table.batch_sizes,
+            telemetry=telemetry,
+            observer=ledger.observer(name),
+        )
+        controller = RemapController(engine, table, store=store)
+        router.add_tenant(
+            name, engine,
+            # the narrow tenant is latency-critical: higher priority,
+            # a deadline tight enough that backlog bursts get shed
+            priority=1 if name == "narrow" else 0,
+            deadline_s=(4.0 * step_s[name] if name == "narrow"
+                        else float("inf")),
+            controller=controller,
+        )
+
+    n = args.requests
+    xs, refs, reqs = {}, {}, {name: [] for name in names}
+    for name in names:
+        m, packed, _ = tenants[name]
+        x01 = jax.random.uniform(
+            jax.random.PRNGKey(7), (n, *m.input_hw, m.in_channels)
+        )
+        xs[name] = np.asarray(prepare_input_packed(x01))
+        refs[name] = np.asarray(forward_packed(m.specs, packed, xs[name]))
+
+    # interleaved trickle: the narrow tenant bursts 2 requests per
+    # round, the wide one 1; the router steps as traffic arrives
+    i = {name: 0 for name in names}
+    while any(i[name] < n for name in names):
+        for name, per_round in (("narrow", 2), ("wide", 1)):
+            for _ in range(per_round):
+                if i[name] < n:
+                    reqs[name].append(
+                        (i[name], router.submit(name, xs[name][i[name]]))
+                    )
+                    i[name] += 1
+        router.step(force=False)
+    router.drain()
+
+    for name in names:
+        lat_us, shed = [], 0
+        for j, r in reqs[name]:
+            if r is None:
+                shed += 1
+                continue
+            scores = r.wait(timeout=5.0)
+            assert np.array_equal(scores, refs[name][j]), (
+                f"{name} response {j} mismatch"
+            )
+            lat_us.append(r.latency_s * 1e6)
+        s = router.stats()[name]
+        u = ledger.usage(name)
+        print(
+            f"{name}: served {s['served']} shed {shed} "
+            f"p50 {np.percentile(lat_us, 50):.0f}us "
+            f"p99 {np.percentile(lat_us, 99):.0f}us  "
+            f"ledger host {u.host_s * 1e3:.1f}ms / "
+            f"device {u.device_s * 1e3:.1f}ms"
+        )
+        assert s["rejected"] == shed
+    print("all served responses verified exact vs per-model references")
+
+
+if __name__ == "__main__":
+    main()

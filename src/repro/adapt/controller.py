@@ -126,6 +126,10 @@ class SwapRecord:
     old_expected_s: float         # old mapping priced on corrected table
     new_expected_s: float
     telemetry: dict               # SegmentTelemetry.snapshot() at swap
+    # which engine this record belongs to: "" for a single-tenant
+    # process (legacy records), the tenant id when several engines'
+    # controllers journal in one process (repro.fleet)
+    tenant: str = ""
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -150,7 +154,14 @@ class RemapController:
         store=None,
         max_remaps: int | None = None,
         clock=time.monotonic,
+        tenant: str | None = None,
     ):
+        """``tenant`` namespaces this controller's journal records —
+        required (in spirit) when several engines' controllers share a
+        process, or two fleets' ``SwapRecord``s are ambiguous.  It
+        defaults to the telemetry's own tenant id, so naming the
+        telemetry once (``SegmentTelemetry(tenant=...)``) names the
+        whole loop."""
         telemetry = telemetry if telemetry is not None else engine.telemetry
         if telemetry is None:
             raise ValueError(
@@ -166,6 +177,10 @@ class RemapController:
         self.store = store
         self.max_remaps = max_remaps
         self._clock = clock
+        self.tenant = (
+            tenant if tenant is not None
+            else getattr(telemetry, "tenant", "")
+        )
         self.journal: list = []
 
     def step(self, *, force: bool = False) -> int:
@@ -210,6 +225,7 @@ class RemapController:
             old_expected_s=old_on_corrected.expected_time_per_example,
             new_expected_s=new.expected_time_per_example,
             telemetry=self.telemetry.snapshot(),
+            tenant=self.tenant,
         )
         self.table = corrected
         # stale segment indices + a moved baseline: start sampling anew

@@ -100,7 +100,14 @@ class SegmentTelemetry:
         sample_every: int = 1,
         warmup: int = 1,
         enabled: bool = True,
+        tenant: str = "",
     ):
+        """``tenant`` names the engine this telemetry instruments.
+        Two engines co-served in one process (``repro.fleet``) each
+        carry their own telemetry; the tenant id rides in
+        :meth:`snapshot` (and from there in every ``SwapRecord``), so
+        journal entries are attributable when N remap loops share a
+        process."""
         if not 0.0 < alpha <= 1.0:
             raise ValueError("alpha must be in (0, 1]")
         if window <= 0:
@@ -114,6 +121,7 @@ class SegmentTelemetry:
         self.sample_every = sample_every
         self.warmup = warmup
         self.enabled = enabled
+        self.tenant = tenant
         self._stats: dict[int, SegmentStats] = {}
         # per-step aggregation buffer: one engine step may drain many
         # micro-batches, and each contributes an observation per
@@ -184,9 +192,12 @@ class SegmentTelemetry:
         self._step = 0
 
     def snapshot(self) -> dict:
-        """Plain-dict summary for logs / the swap journal."""
+        """Plain-dict summary for logs / the swap journal.  Segment
+        entries are keyed by index; a non-empty :attr:`tenant` adds a
+        ``"tenant"`` entry so multi-engine journals stay
+        attributable."""
         self.flush()
-        return {
+        out: dict = {
             i: {
                 "placement": s.placement,
                 "count": s.count,
@@ -196,3 +207,6 @@ class SegmentTelemetry:
             }
             for i, s in sorted(self._stats.items())
         }
+        if self.tenant:
+            out["tenant"] = self.tenant
+        return out

@@ -301,6 +301,84 @@ def segment_times_from_split(
     return tuple(out)
 
 
+def contention_inflation(
+    co_runner_share: float, gamma: float = 1.0
+) -> float:
+    """Kernel-time inflation factor for a tenant whose co-runners
+    occupy ``co_runner_share`` of a processor's time.
+
+    Processor-sharing model: a co-runner that demands *s* seconds of a
+    processor per second of wall clock steals ``s`` of every second,
+    stretching this tenant's kernels on that processor by ``1 + s``
+    (``gamma`` scales the coupling — <1 models partial overlap, e.g. a
+    device whose queues interleave better than a timesliced host).
+    Linear in the share, so inflation is monotone: adding co-runner
+    load never makes a placement look faster — the property the fleet
+    mapper's descent relies on (``repro.fleet.scheduler``).
+    """
+    if gamma < 0.0:
+        raise ValueError("gamma must be non-negative")
+    return 1.0 + gamma * max(0.0, co_runner_share)
+
+
+def inflate_profile(
+    table,
+    *,
+    host_factor: float = 1.0,
+    device_factor: float = 1.0,
+    registry=None,
+):
+    """A contention-inflated copy of a ``ProfileTable``: kernel times
+    of host-placed configs scale by ``host_factor``, device-placed
+    kernels *and* the h2d/d2h boundary rows by ``device_factor`` (the
+    transfer link is device-side occupancy — a contended device delays
+    its uploads too).  Totals are rebuilt under paper semantics
+    (device rows carry the full roundtrip).  Factors of 1.0 share the
+    original rows per batch rather than copying.
+
+    This is the per-tenant view ``repro.fleet.scheduler.map_fleet``
+    re-runs the DP mapper against: the same table, repriced as if the
+    tenant's co-runners were already resident.
+    """
+    from repro.core.profiler import ProfileTable
+
+    if host_factor <= 0.0 or device_factor <= 0.0:
+        raise ValueError("inflation factors must be positive")
+    if host_factor == 1.0 and device_factor == 1.0:
+        return table
+
+    times: dict = {}
+    kernels: dict = {}
+    h2d: dict = {}
+    d2h: dict = {}
+    for b in table.batch_sizes:
+        times[b], kernels[b] = [], []
+        h2d[b] = [table.h2d(b, i) * device_factor
+                  for i in range(len(table.layer_labels))]
+        d2h[b] = [table.d2h(b, i) * device_factor
+                  for i in range(len(table.layer_labels))]
+        for i in range(len(table.layer_labels)):
+            krow, trow = {}, {}
+            for cfg in table.configs_for(b, i):
+                host = _is_host(cfg, registry)
+                k = table.kernel_time(b, i, cfg) * (
+                    host_factor if host else device_factor
+                )
+                krow[cfg] = k
+                trow[cfg] = k if host else k + h2d[b][i] + d2h[b][i]
+            kernels[b].append(krow)
+            times[b].append(trow)
+    return ProfileTable(
+        model_name=table.model_name,
+        batch_sizes=table.batch_sizes,
+        layer_labels=table.layer_labels,
+        times=times,
+        kernel_times=kernels,
+        h2d_times=h2d,
+        d2h_times=d2h,
+    )
+
+
 def pipeline_makespan(
     host_s: float, device_s: float, n_microbatches: int
 ) -> float:

@@ -192,6 +192,21 @@ class EfficientConfiguration:
                 host += t
         return host, device
 
+    def placement_shares(self) -> tuple:
+        """(host_share, device_share): the fraction of this
+        configuration's serial execution time spent on each processor
+        (``stage_times`` normalized; sums to 1).  This is a tenant's
+        *demand* profile — the occupancy it asks of each processor per
+        example served — and is what the fleet mapper
+        (``repro.fleet.scheduler``) charges co-tenants as contention
+        when no measured ledger shares are available.  A configuration
+        with zero total time reports (0, 0)."""
+        host, device = self.stage_times()
+        total = host + device
+        if total <= 0.0:
+            return 0.0, 0.0
+        return host / total, device / total
+
     def pipelined_expected_time(self, n_microbatches: int) -> float:
         """Expected seconds/example of the two-stage segment pipeline
         over ``n_microbatches`` micro-batches of the proper batch size

@@ -1,0 +1,33 @@
+"""Contention-aware multi-model co-serving (``repro.fleet``).
+
+Serving N BNN models on one shared host/device platform composes the
+whole stack — profiler tables, the DP mapper, serving engines, the
+adaptive runtime, the profile store — under one new constraint:
+co-located placements interfere.  Three pieces close that loop
+(docs/ARCHITECTURE.md §10):
+
+* :mod:`scheduler` — :func:`map_fleet`: coordinate-descent joint
+  mapping over per-tenant contention-inflated ProfileTables
+  (``cost_model.inflate_profile``), seeded at — and provably never
+  worse than — the all-models-all-GPU assignment;
+* :mod:`router` — :class:`FleetRouter`: priority/deadline dispatch
+  into per-tenant ServingEngines with admission control (shed at the
+  door rather than serve past the SLO);
+* :mod:`ledger` — :class:`DeviceTimeLedger`: metered per-tenant
+  host/device occupancy feeding measured co-runner shares back into
+  the joint mapper and the per-tenant drift loops.
+
+See ``benchmarks/fleet_bench.py`` and ``examples/serve_fleet.py``.
+"""
+
+from repro.fleet.ledger import DeviceTimeLedger, TenantUsage
+from repro.fleet.router import FleetRouter, Tenant
+from repro.fleet.scheduler import (
+    FleetPlan,
+    TenantPlan,
+    all_device_configuration,
+    device_configs,
+    joint_makespan,
+    map_fleet,
+    tenant_inflations,
+)

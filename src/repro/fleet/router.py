@@ -1,0 +1,186 @@
+"""SLO-aware request routing over per-tenant serving engines.
+
+:class:`FleetRouter` fronts N tenants, each a
+:class:`~repro.serving.ServingEngine` (its ``MicroBatcher`` is the
+tenant's queue) with a priority, a latency deadline, and optionally a
+per-tenant :class:`~repro.adapt.RemapController`:
+
+* **submit** — admission control at the door: a request predicted to
+  complete past its tenant's deadline (queue depth ahead of it, in
+  batches, times the tenant's expected step time) is *rejected now*
+  rather than served late — a shed request costs nothing, a late one
+  cost a batch slot some other tenant's in-SLO request needed.
+  Rejections are counted per tenant (:meth:`stats`).
+* **step** — dispatch: tenants with a ready batch are served in
+  (higher priority first, earliest deadline first) order, one engine
+  step each — strict priority, rather than fair-share, because the
+  joint mapper already balanced sustained load; priority here decides
+  who eats a transient burst's latency.  Tenants with an attached
+  controller are stepped through it, so per-tenant drift detection
+  and remapping ride the same dispatch loop.  When a
+  :class:`~repro.fleet.ledger.DeviceTimeLedger` is attached, every
+  tenant's engine observer feeds it and the router closes the
+  tenant's ledger step after each dispatch.
+
+Threading contract (see ``repro.serving.batcher``): ``submit`` may be
+called from many client threads concurrently; ``step`` must be driven
+from a single dispatch thread.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+
+from repro.serving.batcher import Request
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One co-served model behind the router."""
+
+    name: str
+    engine: ServingEngine
+    priority: int = 0             # higher dispatches first
+    deadline_s: float = math.inf  # per-request latency SLO
+    controller: object = None     # optional RemapController
+    admitted: int = 0
+    rejected: int = 0
+    # guards this tenant's admission decision + counters: submit() is
+    # callable from many client threads, and an unlocked
+    # `admitted += 1` loses increments under thread switches.
+    # Per-tenant, so one tenant's submit storm never serializes
+    # another tenant's clients
+    lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False
+    )
+
+    def step_expected_s(self) -> float:
+        """Predicted wall seconds for one full engine step — one
+        micro-batch of the serving batch size under the tenant's
+        current configuration (hot swaps update this automatically
+        because the engine's config is read live)."""
+        cfg = self.engine.config
+        return cfg.expected_time_per_example * cfg.proper_batch_size
+
+    def backlog_batches(self, extra: int = 1) -> int:
+        """Batches ahead of (and including) a request arriving now."""
+        pending = self.engine.batcher.pending() + extra
+        return math.ceil(pending / self.engine.batcher.max_batch)
+
+
+class FleetRouter:
+    def __init__(self, *, ledger=None):
+        self._tenants: dict[str, Tenant] = {}
+        self.ledger = ledger
+
+    def add_tenant(
+        self,
+        name: str,
+        engine: ServingEngine,
+        *,
+        priority: int = 0,
+        deadline_s: float = math.inf,
+        controller=None,
+    ) -> Tenant:
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        if deadline_s <= 0.0:
+            raise ValueError("deadline_s must be positive")
+        tenant = Tenant(
+            name=name, engine=engine, priority=priority,
+            deadline_s=deadline_s, controller=controller,
+        )
+        self._tenants[name] = tenant
+        return tenant
+
+    def tenant(self, name: str) -> Tenant:
+        return self._tenants[name]
+
+    def tenants(self) -> tuple:
+        return tuple(self._tenants.values())
+
+    # -- admission ---------------------------------------------------
+    def admit(self, name: str) -> bool:
+        """Would a request for `name` submitted now make its
+        deadline?  Estimate: batches ahead of it times the tenant's
+        expected step time (coalescing wait is bounded by the same
+        step cadence, so one backlog term covers both)."""
+        t = self._tenants[name]
+        if math.isinf(t.deadline_s):
+            return True
+        est = t.backlog_batches() * t.step_expected_s()
+        return est <= t.deadline_s
+
+    def submit(self, name: str, x) -> Request | None:
+        """Enqueue one example for tenant `name`, or reject it
+        (returns ``None``, counted in :meth:`stats`) when its
+        predicted completion violates the tenant's deadline.
+        Thread-safe: the admit decision, the counter, and the enqueue
+        happen under the tenant's lock, so counters never drop
+        increments and two racing submits cannot both squeeze into
+        the last slot the deadline allowed."""
+        t = self._tenants[name]
+        with t.lock:
+            if not self.admit(name):
+                t.rejected += 1
+                return None
+            t.admitted += 1
+            return t.engine.submit(x)
+
+    # -- dispatch ----------------------------------------------------
+    def _dispatch_order(self, *, force: bool) -> list:
+        ready = [
+            t for t in self._tenants.values()
+            if (t.engine.batcher.pending() > 0 if force
+                else t.engine.batcher.ready())
+        ]
+        # strict priority; deadline breaks ties (tightest SLO first);
+        # name last so dispatch order is deterministic
+        return sorted(
+            ready, key=lambda t: (-t.priority, t.deadline_s, t.name)
+        )
+
+    def step(self, *, force: bool = False) -> dict:
+        """One dispatch round: every tenant with a ready batch (any
+        pending request under ``force``) takes one engine step, in
+        priority/deadline order.  Returns {tenant: requests served}
+        for the tenants that served."""
+        served = {}
+        for t in self._dispatch_order(force=force):
+            stepper = t.controller.step if t.controller else t.engine.step
+            done = stepper(force=force)
+            if self.ledger is not None:
+                self.ledger.close_step(t.name)
+            if done:
+                served[t.name] = done
+        return served
+
+    def drain(self, *, max_steps: int = 1000) -> dict:
+        """Forced steps until every tenant's queue is empty (bounded
+        by ``max_steps``).  Returns total {tenant: served}."""
+        total: dict = {}
+        for _ in range(max_steps):
+            served = self.step(force=True)
+            if not served:
+                break
+            for name, n in served.items():
+                total[name] = total.get(name, 0) + n
+        return total
+
+    def stats(self) -> dict:
+        """Per-tenant admission/served counters for reporting."""
+        return {
+            t.name: {
+                "priority": t.priority,
+                "deadline_s": t.deadline_s,
+                "admitted": t.admitted,
+                "rejected": t.rejected,
+                "served": t.engine.served,
+                "steps": t.engine.steps,
+                "swaps": t.engine.swaps,
+            }
+            for t in self._tenants.values()
+        }

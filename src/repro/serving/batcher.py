@@ -12,6 +12,15 @@ outputs are discarded before responses complete.
 
 The clock is injectable so coalescing deadlines are deterministic
 under test.
+
+**Thread-safety.**  :meth:`MicroBatcher.submit` may be called from
+any number of threads concurrently — the queue is lock-protected and
+FIFO by submission timestamp (the clock is read under the lock, so
+queue order and ``submit_t`` order agree).  ``next_batch``/``drain``
+are also lock-safe (two drainers never pop the same request), but the
+serving engine's step path is single-threaded by contract — see
+``repro.serving.engine``.  The fleet router depends on exactly this
+split: client threads submit, one dispatch thread drains.
 """
 
 from __future__ import annotations
@@ -129,8 +138,13 @@ class MicroBatcher:
         self._queue: deque = deque()
 
     def submit(self, x) -> Request:
-        req = Request(x=np.asarray(x), submit_t=self._clock())
+        x = np.asarray(x)
+        # the clock is read *inside* the lock: two threads racing
+        # submit() must enqueue in timestamp order, or ready()'s
+        # oldest-request age check could read a non-head timestamp and
+        # a batch's coalescing deadline would jitter by the race window
         with self._lock:
+            req = Request(x=x, submit_t=self._clock())
             self._queue.append(req)
         return req
 

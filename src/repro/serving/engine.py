@@ -27,6 +27,16 @@ configurations.  The new pipeline is built *before* the old one is
 released; a failed build leaves the engine serving the old mapping.
 The adaptive loop around this primitive (telemetry -> drift ->
 corrected table -> re-mapped configuration) lives in ``repro.adapt``.
+
+**Threading contract.**  ``submit()`` is thread-safe — any number of
+client threads may enqueue concurrently (the ``MicroBatcher`` queue is
+lock-protected and FIFO by submission order), and ``Request.wait()``
+blocks safely on any thread.  ``step()`` / ``swap_configuration()``
+are **not** reentrant: drive them from a single dispatch thread (the
+pattern ``repro.fleet.FleetRouter`` runs — N client threads
+submitting, one router thread stepping).  Two threads stepping one
+engine concurrently would interleave two wave-trains through one
+pipeline and corrupt the served/steps accounting.
 """
 
 from __future__ import annotations
@@ -38,6 +48,19 @@ from repro.bnn.models import BNNModel
 from repro.core.mapper import EfficientConfiguration
 from repro.serving.batcher import MicroBatcher, Request
 from repro.serving.pipeline import SegmentPipeline
+
+
+def _tee(always, sampled):
+    """Compose the always-on observer with a (possibly absent)
+    sampled telemetry observer into one pipeline callback."""
+    if sampled is None:
+        return always
+
+    def observe(seg_index, segment, seconds, batch):
+        always(seg_index, segment, seconds, batch)
+        sampled(seg_index, segment, seconds, batch)
+
+    return observe
 
 
 class ServingEngine:
@@ -53,13 +76,21 @@ class ServingEngine:
         clock=time.monotonic,
         device=None,
         telemetry=None,
+        observer=None,
     ):
         """``max_batch`` defaults to the mapper's proper batch size —
         the batch the configuration was optimized for.  Pass the
         ProfileTable's ``batch_sizes`` as ``allowed_batch_sizes`` so
         partial batches pad to a profiled size.  ``telemetry``
         (``repro.adapt.SegmentTelemetry``) records per-segment wall
-        times on its sampled steps; ``None`` serves un-instrumented."""
+        times on its sampled steps; ``None`` serves un-instrumented.
+        ``observer`` is an *always-on* segment observer fired on every
+        step (composed with the sampled telemetry observer when both
+        are present) — the fleet device-time ledger's feed
+        (``DeviceTimeLedger.observer(tenant)``).  An observer forces
+        the pipelined driver to sync device segments for true wall
+        times, so always-on observation trades overlap for metered
+        occupancy (see ``repro.serving.pipeline``)."""
         if max_batch is None:
             max_batch = config.proper_batch_size
         if allowed_batch_sizes is None:
@@ -77,6 +108,7 @@ class ServingEngine:
         )
         self._clock = clock
         self.telemetry = telemetry
+        self.observer = observer
         self.served = 0
         self.steps = 0               # non-empty steps (batch boundaries)
         self.swaps = 0
@@ -157,6 +189,8 @@ class ServingEngine:
         observer = None
         if self.telemetry is not None:
             observer = self.telemetry.sample()
+        if self.observer is not None:
+            observer = _tee(self.observer, observer)
         self._in_step = True
         try:
             self.pipeline.run_pipelined(

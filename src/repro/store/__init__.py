@@ -1,13 +1,15 @@
 """Persistent profile/mapping store (``ProfileStore``): ProfileTables
 and EfficientConfigurations persisted to disk keyed by (hardware
-fingerprint, model signature, batch sizes, registry hash), with
-versioned JSON envelopes, warm start, and gc/inspect/export tooling
-(``tools/profile_store.py``).  See docs/ARCHITECTURE.md §9.
+fingerprint, model signature, batch sizes, registry hash, optional
+co-tenancy scope), with versioned JSON envelopes, warm start, and
+gc/inspect/export tooling (``tools/profile_store.py``).  See
+docs/ARCHITECTURE.md §9 (and §10 for fleet-scoped keys).
 """
 
 from repro.store.profile_store import (
     ProfileStore,
     StoreEntry,
+    fleet_scope,
     hardware_fingerprint,
     model_signature,
     registry_hash,

@@ -26,7 +26,13 @@ sizes and kernel space it was measured under, so entries are keyed by
 * the profiled ``batch_sizes`` (profiles) / serving batch (mappings);
 * ``registry_hash()`` — the kernel-variant registry's names and
   pricing metadata (registering a new variant invalidates nothing, it
-  just keys new entries; *changing* a variant's semantics re-keys).
+  just keys new entries; *changing* a variant's semantics re-keys);
+* optionally a **scope** — a namespace for artifacts that are only
+  valid under a particular co-tenancy: a fleet's jointly-mapped
+  configurations (``repro.fleet``) are optimal only against that
+  fleet's co-runners, so they live under ``fleet_scope(names)`` and a
+  solo warm start can never pick one up (nor vice versa).  Scope-less
+  entries stay where previous versions wrote them.
 
 **Layout.**  ``root/v<schema>/<fingerprint>/<model>-r<registry>/`` with
 one JSON document per artifact (``profile-b<sizes>.json``,
@@ -113,6 +119,18 @@ def _batch_key(batch_sizes: Sequence[int]) -> str:
     return "x".join(str(int(b)) for b in sorted(batch_sizes))
 
 
+def fleet_scope(tenant_names: Sequence[str]) -> str:
+    """The store scope for a fleet's artifacts, canonicalized over the
+    tenant composition (order-insensitive, duplicates collapse): the
+    same models co-served in any order share warm starts, a different
+    mix re-keys — a mapping jointly optimized against one set of
+    co-runners must never warm-start another."""
+    names = sorted(set(tenant_names))
+    if not names:
+        raise ValueError("fleet_scope needs at least one tenant name")
+    return "fleet-" + _digest(names)
+
+
 @dataclasses.dataclass(frozen=True)
 class StoreEntry:
     """One artifact on disk, as ``inspect`` reports it."""
@@ -130,8 +148,27 @@ class StoreEntry:
 
 
 class ProfileStore:
-    def __init__(self, root, *, fingerprint: str | None = None, registry=None):
+    def __init__(
+        self,
+        root,
+        *,
+        fingerprint: str | None = None,
+        registry=None,
+        scope: str | None = None,
+    ):
+        """``scope`` namespaces every artifact this handle reads or
+        writes (module docstring): a scoped store neither sees
+        scope-less entries nor leaks into them — fleets pass
+        :func:`fleet_scope` so per-co-tenancy mappings and solo
+        mappings of the same model coexist under one root."""
+        if scope is not None and (
+            not scope or any(c in scope for c in "/\\\0")
+        ):
+            raise ValueError(
+                "scope must be a non-empty path-component-safe string"
+            )
         self.root = Path(root)
+        self.scope = scope
         self._fingerprint = fingerprint
         self._registry = registry
         self._registry_hash: str | None = None
@@ -150,12 +187,10 @@ class ProfileStore:
         return self._registry_hash
 
     def _dir(self, model_sig: str) -> Path:
-        return (
-            self.root
-            / f"v{SCHEMA_VERSION}"
-            / self.fingerprint
-            / f"{model_sig}-r{self.space_hash}"
-        )
+        base = self.root / f"v{SCHEMA_VERSION}" / self.fingerprint
+        if self.scope is not None:
+            base = base / f"s-{self.scope}"
+        return base / f"{model_sig}-r{self.space_hash}"
 
     def profile_path(self, model_sig: str, batch_sizes) -> Path:
         return self._dir(model_sig) / f"profile-b{_batch_key(batch_sizes)}.json"
@@ -173,6 +208,8 @@ class ProfileStore:
                 "key": {
                     "fingerprint": self.fingerprint,
                     "registry": self.space_hash,
+                    **({"scope": self.scope}
+                       if self.scope is not None else {}),
                     **key,
                 },
                 "payload": payload,
@@ -197,6 +234,10 @@ class ProfileStore:
         if key.get("fingerprint") != self.fingerprint:
             return None
         if key.get("registry") != self.space_hash:
+            return None
+        # symmetric scope check: a scoped handle refuses scope-less
+        # entries and vice versa (key.get returns None for both sides)
+        if key.get("scope") != self.scope:
             return None
         return doc
 

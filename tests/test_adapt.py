@@ -536,6 +536,46 @@ def test_controller_serves_bit_exact_across_live_remap(small):
     assert engine.swaps >= 1
 
 
+def test_tenant_id_namespaces_journal_and_snapshot(small):
+    """Two engines' controllers in one process must produce
+    attributable records: the telemetry's tenant id rides in its
+    snapshot and (via the controller default) in every SwapRecord."""
+    m, packed, table, ec = small
+    host_idx = [
+        i for i, s in enumerate(ec.segments()) if not s.on_device
+    ]
+    records = []
+    for name in ("tenant-a", "tenant-b"):
+        tel = SegmentTelemetry(warmup=0, tenant=name)
+        engine = ServingEngine(
+            m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+            clock=FakeClock(), telemetry=tel,
+        )
+        ctl = RemapController(
+            engine, table,
+            detector=DriftDetector(rel_threshold=0.5, min_samples=3),
+            clock=FakeClock(),
+        )
+        assert ctl.tenant == name         # defaulted from telemetry
+        _observe(tel, ec, {i: 50.0 for i in host_idx})
+        assert tel.snapshot()["tenant"] == name
+        records.append(ctl.maybe_remap())
+    assert [r.tenant for r in records] == ["tenant-a", "tenant-b"]
+    assert records[0].to_dict()["tenant"] == "tenant-a"
+    # explicit tenant= beats the telemetry default
+    tel = SegmentTelemetry(warmup=0, tenant="from-tel")
+    engine = ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        clock=FakeClock(), telemetry=tel,
+    )
+    assert RemapController(
+        engine, table, tenant="explicit", clock=FakeClock()
+    ).tenant == "explicit"
+    # legacy single-tenant loops: unnamed telemetry keeps the old
+    # snapshot schema (segment indices only)
+    assert "tenant" not in SegmentTelemetry().snapshot()
+
+
 # ---------------------------------------------------------------------------
 # registry-wired hillclimb
 # ---------------------------------------------------------------------------

@@ -1,0 +1,454 @@
+"""Fleet co-serving: contention inflation of profile tables, the
+joint mapper's never-worse-than-all-GPU guarantee, device-time ledger
+accounting, and the SLO router's admission/priority/dispatch — ending
+in a two-tenant co-serve that is bit-exact per model."""
+
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import (
+    forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.cost_model import contention_inflation, inflate_profile
+from repro.core.mapper import (
+    HOST,
+    configuration_from_mapping,
+    map_efficient_configuration,
+)
+from repro.core.parallel_config import CONFIGS, CPU, FULL_GPU
+from repro.core.profiler import ProfileTable
+from repro.fleet import (
+    DeviceTimeLedger,
+    FleetRouter,
+    all_device_configuration,
+    device_configs,
+    joint_makespan,
+    map_fleet,
+    tenant_inflations,
+)
+from repro.serving import ServingEngine, canonical_mixed_mapping
+
+
+def _random_split_table(rng, n_layers=5, batches=(1, 4), name="synthetic"):
+    kernel, times, h2d, d2h = {}, {}, {}, {}
+    for b in batches:
+        kernel[b], times[b], h2d[b], d2h[b] = [], [], [], []
+        for _ in range(n_layers):
+            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            up = float(rng.uniform(1e-6, 5e-4))
+            down = float(rng.uniform(1e-6, 5e-4))
+            times[b].append({
+                c: krow[c] if c == CPU else krow[c] + up + down
+                for c in CONFIGS
+            })
+            kernel[b].append(krow)
+            h2d[b].append(up)
+            d2h[b].append(down)
+    return ProfileTable(
+        name, tuple(batches),
+        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
+        kernel_times=kernel, h2d_times=h2d, d2h_times=d2h,
+    )
+
+
+def _tied_table(name, n_layers=4, batch=4, cpu=1.0, gpu=0.9, bnd=0.005):
+    """CPU and device near-tied per layer — the regime where joint
+    mapping has a genuine placement choice."""
+    times = {batch: [
+        {c: cpu if c == CPU else gpu + 2 * bnd for c in CONFIGS}
+        for _ in range(n_layers)
+    ]}
+    kernels = {batch: [
+        {c: cpu if c == CPU else gpu for c in CONFIGS}
+        for _ in range(n_layers)
+    ]}
+    return ProfileTable(
+        name, (batch,),
+        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
+        kernel_times=kernels,
+        h2d_times={batch: [bnd] * n_layers},
+        d2h_times={batch: [bnd] * n_layers},
+    )
+
+
+# ---------------------------------------------------------------------------
+# contention inflation
+# ---------------------------------------------------------------------------
+
+
+def test_contention_inflation_is_monotone_and_validates():
+    assert contention_inflation(0.0) == 1.0
+    assert contention_inflation(1.0) == 2.0
+    assert contention_inflation(1.0, gamma=0.5) == 1.5
+    assert contention_inflation(-3.0) == 1.0          # clamped below
+    xs = [contention_inflation(s) for s in (0.0, 0.3, 0.7, 2.0)]
+    assert xs == sorted(xs)
+    with pytest.raises(ValueError):
+        contention_inflation(0.5, gamma=-1.0)
+
+
+def test_inflate_profile_scales_by_placement():
+    rng = np.random.default_rng(0)
+    t = _random_split_table(rng)
+    out = inflate_profile(t, host_factor=3.0, device_factor=2.0)
+    for b in t.batch_sizes:
+        for i in range(len(t.layer_labels)):
+            assert out.h2d(b, i) == pytest.approx(2.0 * t.h2d(b, i))
+            assert out.d2h(b, i) == pytest.approx(2.0 * t.d2h(b, i))
+            for c in t.configs_for(b, i):
+                f = 3.0 if c == CPU else 2.0
+                assert out.kernel_time(b, i, c) == pytest.approx(
+                    f * t.kernel_time(b, i, c)
+                )
+                expect = out.kernel_time(b, i, c) + (
+                    0.0 if c == CPU
+                    else out.h2d(b, i) + out.d2h(b, i)
+                )
+                assert out.times[b][i][c] == pytest.approx(expect)
+    # identity factors share the original object (no copy)
+    assert inflate_profile(t) is t
+    with pytest.raises(ValueError):
+        inflate_profile(t, host_factor=0.0)
+
+
+def test_placement_shares_sum_to_one():
+    t = _tied_table("m")
+    ec = configuration_from_mapping(
+        t, 4, (CPU, FULL_GPU, FULL_GPU, CPU)
+    )
+    host, dev = ec.placement_shares()
+    assert host + dev == pytest.approx(1.0)
+    assert 0.0 < host < 1.0 and 0.0 < dev < 1.0
+    all_host = configuration_from_mapping(t, 4, (CPU,) * 4)
+    assert all_host.placement_shares() == (1.0, 0.0)
+
+
+def test_tenant_inflations_sum_co_runners_only():
+    shares = [(0.25, 0.75), (1.0, 0.0), (0.0, 1.0)]
+    host_f, dev_f = tenant_inflations(shares, 0, gamma=1.0)
+    assert host_f == pytest.approx(2.0)     # 1 + (1.0 + 0.0)
+    assert dev_f == pytest.approx(2.0)      # 1 + (0.0 + 1.0)
+    host_f, dev_f = tenant_inflations(shares, 1, gamma=2.0)
+    assert host_f == pytest.approx(1.5)     # 1 + 2*(0.25 + 0.0)
+    assert dev_f == pytest.approx(4.5)      # 1 + 2*(0.75 + 1.0)
+
+
+# ---------------------------------------------------------------------------
+# joint mapper
+# ---------------------------------------------------------------------------
+
+
+def test_all_device_configuration_places_everything_on_device():
+    t = _tied_table("m", cpu=0.1, gpu=5.0)  # CPU strictly better solo
+    assert CPU not in device_configs(t)
+    ec = all_device_configuration(t)
+    assert all(c != CPU for c in ec.layer_configs)
+    # and the unconstrained DP would have chosen CPU — the restriction
+    # is what makes this the all-GPU baseline, not the optimum
+    free = map_efficient_configuration(t, policy="dp")
+    assert all(c == CPU for c in free.layer_configs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_map_fleet_never_worse_than_all_gpu(seed):
+    """The acceptance property: on any pair of tables, the joint plan's
+    makespan under the inflated cost model is <= the all-GPU fleet
+    assignment's on the same tables (descent seeds there and only
+    accepts improvements)."""
+    rng = np.random.default_rng(seed)
+    tables = [
+        _random_split_table(rng, name="a"),
+        _random_split_table(rng, name="b"),
+    ]
+    gamma = float(rng.uniform(0.2, 2.0))
+    plan = map_fleet(tables, gamma=gamma)
+    all_gpu = [all_device_configuration(t) for t in tables]
+    baseline = joint_makespan(tables, all_gpu, gamma=gamma)
+    assert plan.baseline_makespan_s == pytest.approx(baseline)
+    assert plan.joint_makespan_s <= baseline + 1e-12
+    assert plan.vs_all_gpu <= 1.0 + 1e-9
+    # the plan prices itself consistently with joint_makespan
+    assert plan.joint_makespan_s == pytest.approx(
+        joint_makespan(tables, plan.configs, gamma=gamma)
+    )
+    assert max(t.makespan_s for t in plan.tenants) == pytest.approx(
+        plan.joint_makespan_s
+    )
+
+
+def test_map_fleet_splits_near_tied_tenants_across_processors():
+    """Two tenants whose solo optimum is the same device must not
+    both stay there when the host is near-tied: the joint plan
+    separates them and strictly beats all-GPU."""
+    tables = [_tied_table("a"), _tied_table("b")]
+    plan = map_fleet(tables, gamma=1.0)
+    assert plan.converged
+    assert plan.joint_makespan_s < plan.baseline_makespan_s * 0.75
+    placements = [
+        {HOST if c == CPU else "device" for c in t.config.layer_configs}
+        for t in plan.tenants
+    ]
+    # each tenant is internally uniform, and they differ
+    assert all(len(p) == 1 for p in placements)
+    assert placements[0] != placements[1]
+    # solo-vs-inflated bookkeeping: the device tenant runs uncontended
+    for t in plan.tenants:
+        assert t.inflated_expected_s >= t.solo_expected_s - 1e-12
+
+
+def test_map_fleet_single_tenant_degenerates_to_solo_dp():
+    t = _tied_table("solo", cpu=0.5)        # CPU wins outright
+    plan = map_fleet([t])
+    solo = map_efficient_configuration(t, policy="dp")
+    assert plan.tenants[0].config.layer_configs == solo.layer_configs
+    assert plan.tenants[0].host_inflation == 1.0
+    assert plan.tenants[0].device_inflation == 1.0
+
+
+def test_map_fleet_measured_shares_override_demand():
+    """A ledger that says one tenant is actually idle (zero shares)
+    removes its contention: the other tenant keeps its solo device
+    mapping instead of fleeing to the host."""
+    tables = [_tied_table("a"), _tied_table("b")]
+    plan = map_fleet(
+        tables, shares=[(0.0, 0.0), None], gamma=1.0
+    )
+    # tenant b sees no co-runner on the device -> stays all-device
+    assert all(c != CPU for c in plan.tenants[1].config.layer_configs)
+    assert plan.tenants[1].device_inflation == 1.0
+
+
+def test_map_fleet_validates():
+    t = _tied_table("a")
+    with pytest.raises(ValueError):
+        map_fleet([])
+    with pytest.raises(ValueError, match="names"):
+        map_fleet([t], names=("a", "b"))
+    with pytest.raises(ValueError, match="shares"):
+        map_fleet([t], shares=[(0, 1), (0, 1)])
+    with pytest.raises(ValueError, match="weights"):
+        map_fleet([t], weights=(1.0, 2.0))
+    host_only = ProfileTable(
+        "h", (4,), ("L1:C64",),
+        {4: [{CPU: 1.0}]}, kernel_times={4: [{CPU: 1.0}]},
+        h2d_times={4: [0.0]}, d2h_times={4: [0.0]},
+    )
+    with pytest.raises(ValueError, match="device"):
+        device_configs(host_only)
+
+
+def test_fleet_weights_shift_the_bottleneck():
+    """The makespan is weighted: a tenant serving 10x the traffic
+    dominates, so the plan optimizes around it."""
+    tables = [_tied_table("a"), _tied_table("b")]
+    plan = map_fleet(tables, weights=(10.0, 1.0))
+    # the heavy tenant's weighted time is the makespan
+    assert plan.joint_makespan_s == pytest.approx(
+        max(t.makespan_s for t in plan.tenants)
+    )
+    heavy = plan.tenants[0]
+    assert heavy.makespan_s >= plan.tenants[1].makespan_s
+
+
+# ---------------------------------------------------------------------------
+# device-time ledger
+# ---------------------------------------------------------------------------
+
+
+class _Seg:
+    def __init__(self, placement):
+        self.placement = placement
+
+
+def test_ledger_accounts_per_tenant_and_placement():
+    led = DeviceTimeLedger()
+    obs_a = led.observer("a")
+    obs_a(0, _Seg(HOST), 1.0, 4)
+    obs_a(1, _Seg("device"), 3.0, 4)
+    led.close_step("a")
+    led.record("b", "device", 2.0)
+    led.close_step("b")
+    ua, ub = led.usage("a"), led.usage("b")
+    assert (ua.host_s, ua.device_s, ua.steps) == (1.0, 3.0, 1)
+    assert (ub.host_s, ub.device_s) == (0.0, 2.0)
+    assert led.shares()["a"] == (pytest.approx(0.25), pytest.approx(0.75))
+    assert led.co_runner_share("a", "device") == pytest.approx(1.0)
+    assert led.co_runner_share("b", HOST) == pytest.approx(0.25)
+    assert led.co_runner_share("b", "device") == pytest.approx(0.75)
+    snap = led.snapshot()
+    assert snap["a"]["device_share"] == pytest.approx(0.75)
+    led.reset("a")
+    assert led.tenants() == ("b",)
+    led.reset()
+    assert led.tenants() == ()
+
+
+def test_ledger_window_bounds_history():
+    led = DeviceTimeLedger(window=4)
+    for i in range(10):
+        led.record("a", HOST if i < 8 else "device", 1.0)
+        led.close_step("a")
+    u = led.usage("a")
+    assert u.steps == 4                      # only the window retained
+    assert u.host_s == 2.0 and u.device_s == 2.0
+    with pytest.raises(ValueError):
+        DeviceTimeLedger(window=0)
+
+
+def test_ledger_open_step_is_visible_and_idle_tenant_shares_zero():
+    led = DeviceTimeLedger()
+    led.record("a", HOST, 2.0)               # step not yet closed
+    assert led.usage("a").host_s == 2.0
+    assert led.usage("idle").share(HOST) == 0.0
+    led.close_step("idle")                   # no-op, nothing open
+    assert "idle" not in led.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# SLO router
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def two_tenants():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    table = ProfileTable(
+        m.name, (4,), labels,
+        times={4: [{c: 1e-4 for c in CONFIGS} for _ in m.specs]},
+        kernel_times={4: [{c: 1e-4 for c in CONFIGS} for _ in m.specs]},
+        h2d_times={4: [1e-5] * len(m.specs)},
+        d2h_times={4: [1e-5] * len(m.specs)},
+    )
+    ec = configuration_from_mapping(table, 4, canonical_mixed_mapping(m))
+    return m, packed, table, ec
+
+
+def test_router_admission_sheds_past_deadline(two_tenants):
+    m, packed, table, ec = two_tenants
+    router = FleetRouter()
+    engine = ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes
+    )
+    step_s = ec.expected_time_per_example * ec.proper_batch_size
+    t = router.add_tenant("a", engine, deadline_s=1.5 * step_s)
+    xw = np.zeros_like(
+        np.asarray(prepare_input_packed(
+            jax.random.uniform(jax.random.PRNGKey(0), (1, 28, 28, 1))
+        ))[0]
+    )
+    # one batch fits the deadline; the 5th request implies two batches
+    got = [router.submit("a", xw) for _ in range(5)]
+    assert all(r is not None for r in got[:4]) and got[4] is None
+    assert (t.admitted, t.rejected) == (4, 1)
+    stats = router.stats()["a"]
+    assert stats["rejected"] == 1 and stats["admitted"] == 4
+    # an infinite deadline never sheds, whatever the backlog
+    relaxed = router.add_tenant("b", ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes
+    ))
+    assert math.isinf(relaxed.deadline_s)
+    assert all(
+        router.submit("b", xw) is not None for _ in range(20)
+    )
+    with pytest.raises(ValueError):
+        router.add_tenant("a", engine)       # duplicate name
+    with pytest.raises(ValueError):
+        router.add_tenant("c", engine, deadline_s=0.0)
+
+
+def test_router_dispatch_order_priority_then_deadline(two_tenants):
+    m, packed, table, ec = two_tenants
+
+    def engine():
+        return ServingEngine(
+            m, packed, ec, allowed_batch_sizes=table.batch_sizes
+        )
+
+    router = FleetRouter()
+    router.add_tenant("low", engine(), priority=0, deadline_s=1.0)
+    router.add_tenant("hi", engine(), priority=5)
+    router.add_tenant("tight", engine(), priority=0, deadline_s=0.5)
+    xw = np.asarray(prepare_input_packed(
+        jax.random.uniform(jax.random.PRNGKey(1), (1, 28, 28, 1))
+    ))[0]
+    for name in ("low", "hi", "tight"):
+        router.tenant(name).engine.submit(xw)
+    order = [t.name for t in router._dispatch_order(force=True)]
+    assert order == ["hi", "tight", "low"]
+    # nothing ready without force (partial batches, fresh clock)
+    assert router._dispatch_order(force=False) == []
+
+
+def test_router_co_serves_two_models_bit_exact(two_tenants):
+    """End to end: two tenants behind one router + ledger, interleaved
+    traffic, per-tenant outputs bit-exact, ledger metered both."""
+    m, packed, table, ec = two_tenants
+    m2 = build_model("fashion_mnist", scale=0.375)
+    packed2 = pack_params(m2.specs, m2.init(jax.random.PRNGKey(1)))
+    labels2 = tuple(f"L{s.idx}:{s.notation}" for s in m2.specs)
+    table2 = ProfileTable(
+        m2.name, (4,), labels2,
+        times={4: [{c: 1e-4 for c in CONFIGS} for _ in m2.specs]},
+        kernel_times={4: [{c: 1e-4 for c in CONFIGS} for _ in m2.specs]},
+        h2d_times={4: [1e-5] * len(m2.specs)},
+        d2h_times={4: [1e-5] * len(m2.specs)},
+    )
+    ec2 = configuration_from_mapping(
+        table2, 4, canonical_mixed_mapping(m2)
+    )
+    ledger = DeviceTimeLedger()
+    router = FleetRouter(ledger=ledger)
+    for name, (mm, pp, tt, cc) in {
+        "small": (m, packed, table, ec),
+        "large": (m2, packed2, table2, ec2),
+    }.items():
+        router.add_tenant(name, ServingEngine(
+            mm, pp, cc, allowed_batch_sizes=tt.batch_sizes,
+            observer=ledger.observer(name),
+        ), priority=1 if name == "small" else 0)
+
+    n = 8
+    xs = {
+        "small": np.asarray(prepare_input_packed(jax.random.uniform(
+            jax.random.PRNGKey(2), (n, 28, 28, 1)))),
+        "large": np.asarray(prepare_input_packed(jax.random.uniform(
+            jax.random.PRNGKey(3), (n, 28, 28, 1)))),
+    }
+    refs = {
+        "small": np.asarray(forward_packed(m.specs, packed, xs["small"])),
+        "large": np.asarray(
+            forward_packed(m2.specs, packed2, xs["large"])
+        ),
+    }
+    reqs = {"small": [], "large": []}
+    for i in range(n):
+        for name in ("small", "large"):
+            r = router.submit(name, xs[name][i])
+            assert r is not None
+            reqs[name].append(r)
+    served = router.drain()
+    assert served == {"small": n, "large": n}
+    for name in ("small", "large"):
+        for i, r in enumerate(reqs[name]):
+            assert np.array_equal(r.wait(timeout=5.0), refs[name][i])
+    # the ledger metered both tenants, host and device both nonzero
+    # (canonical mixed mapping alternates placements)
+    for name in ("small", "large"):
+        u = ledger.usage(name)
+        assert u.steps >= 1
+        assert u.host_s > 0.0 and u.device_s > 0.0
+    assert sum(
+        v for v in (
+            ledger.co_runner_share("small", HOST),
+            ledger.co_runner_share("small", "device"),
+        )
+    ) == pytest.approx(1.0)

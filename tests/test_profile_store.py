@@ -180,6 +180,100 @@ def test_store_batch_key_is_order_insensitive(tmp_path):
     assert got is not None and got.times == t.times
 
 
+def test_identical_signatures_different_registries_never_collide(tmp_path):
+    """Two fleets may serve the *same* model under different kernel
+    registries (e.g. one with an extra variant registered); their
+    signatures are identical, so only the registry hash separates
+    their entries — it must, in both directions."""
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    reg2 = VariantRegistry()
+    _register_defaults(reg2)
+    reg2.register(KernelVariant(
+        name="fleet_only", placement="device", aspects=("X",),
+        applicable=lambda shape, platform=None: True,
+        builder=lambda p, w, k: None,
+    ))
+    a = ProfileStore(tmp_path, fingerprint="f")
+    b = ProfileStore(tmp_path, fingerprint="f", registry=reg2)
+    assert a.space_hash != b.space_hash
+    assert model_signature(m) == model_signature(m)  # same model key
+    a.save_profile(t)
+    assert a.load_profile(m, t.batch_sizes) is not None
+    assert b.load_profile(m, t.batch_sizes) is None  # no cross-read
+    b.save_profile(t)
+    # distinct paths on disk, both now readable through their own key
+    assert a.profile_path(model_signature(m), t.batch_sizes) != (
+        b.profile_path(model_signature(m), t.batch_sizes)
+    )
+    assert a.load_profile(m, t.batch_sizes) is not None
+    assert b.load_profile(m, t.batch_sizes) is not None
+
+
+def test_fleet_scope_round_trip_and_isolation(tmp_path):
+    """The fleet-key contract: a mapping jointly optimized under one
+    co-tenancy round-trips through its scoped store, and neither a
+    solo (scope-less) store nor a different fleet's scope can read
+    it — same model, same fingerprint, same registry throughout."""
+    from repro.store import fleet_scope
+
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    t = _table(model_name=m.name, n_layers=len(labels))
+    t = ProfileTable(
+        m.name, t.batch_sizes, labels, t.times,
+        kernel_times=t.kernel_times, h2d_times=t.h2d_times,
+        d2h_times=t.d2h_times,
+    )
+    ec = map_efficient_configuration(t, policy="dp")
+
+    # scope canonicalization: order/duplicates collapse, mix re-keys
+    scope = fleet_scope(("mnist-a", "mnist-b"))
+    assert scope == fleet_scope(("mnist-b", "mnist-a", "mnist-a"))
+    assert scope != fleet_scope(("mnist-a", "mnist-c"))
+    with pytest.raises(ValueError):
+        fleet_scope(())
+
+    solo = ProfileStore(tmp_path, fingerprint="f")
+    fleet = ProfileStore(tmp_path, fingerprint="f", scope=scope)
+    other = ProfileStore(
+        tmp_path, fingerprint="f", scope=fleet_scope(("x", "y"))
+    )
+    fleet.save_mapping(ec)
+    fleet.save_profile(t)
+    got = fleet.load_mapping(m, policy="dp")
+    assert got is not None and got.layer_configs == ec.layer_configs
+    assert fleet.load_profile(m, t.batch_sizes) is not None
+    # isolation in every direction
+    assert solo.load_mapping(m, policy="dp") is None
+    assert other.load_mapping(m, policy="dp") is None
+    solo.save_mapping(ec)
+    assert solo.load_mapping(m, policy="dp") is not None
+    assert other.load_mapping(m, policy="dp") is None
+    # the envelope records the scope, and inspect sees all entries
+    doc = json.loads(
+        fleet.mapping_path(
+            model_signature(m), "dp", ec.proper_batch_size
+        ).read_text()
+    )
+    assert doc["key"]["scope"] == scope
+    kinds = [e.key.get("scope") for e in solo.entries()]
+    assert scope in kinds and None in kinds
+
+
+def test_store_scope_validates():
+    with pytest.raises(ValueError, match="scope"):
+        ProfileStore("/tmp/x", scope="")
+    with pytest.raises(ValueError, match="scope"):
+        ProfileStore("/tmp/x", scope="a/b")
+
+
 def test_warm_start_rejects_mapping_from_unprofiled_batch(tmp_path):
     """A mapping remapped/saved at a batch outside the requested sweep
     must be re-derived from the table, not served against it."""
