@@ -1,7 +1,7 @@
 """CI bench-smoke: tiny-size benchmark run + regression gate.
 
-Runs ``kernel_bench``, ``serve_bench``, ``adapt_bench`` and
-``fleet_bench`` at CI-sized settings (model ``scale=0.25``, batches
+Runs ``kernel_bench``, ``segment_bench``, ``serve_bench``,
+``adapt_bench`` and ``fleet_bench`` at CI-sized settings (model ``scale=0.25``, batches
 ``(1, 4)``, one timing repeat), writes the results as JSON (the
 ``BENCH_pr.json`` artifact the CI job uploads), and — with
 ``--check`` — fails when any metric regressed by more than the
@@ -13,9 +13,10 @@ within its batch budget, recovered steady state beating the frozen
 mapping, all outputs bit-exact) and ``fleet_bench`` asserts the joint
 mapping's never-worse-than-all-GPU guarantee plus a measured two-model
 co-run makespan win, bit-exact per tenant — so a broken loop fails the
-job outright, before any timing comparison.  Their ``us=0`` sentinel
-rows are coverage-gated (missing from a PR run fails) but not
-timing-gated.
+job outright, before any timing comparison.  ``segment_bench`` asserts
+every applicable fused segment-scope variant bit-exact against the
+per-layer launch.  Their ``us=0`` sentinel rows are coverage-gated
+(missing from a PR run fails) but not timing-gated.
 
 Gate semantics:
 
@@ -52,6 +53,12 @@ BASELINE_PATH = Path(__file__).parent / "baseline.json"
 # must come from the same settings or the comparison is meaningless
 SMOKE_KWARGS = {
     "kernel_bench": {"scale": 0.25, "batch_sizes": (1, 4), "repeats": 1},
+    "segment_bench": {
+        "scale": 0.25,
+        "batch_sizes": (1,),
+        "repeats": 1,
+        "profile_repeats": 1,
+    },
     "serve_bench": {
         "scale": 0.25,
         "batch_sizes": (1, 4),
@@ -84,12 +91,14 @@ SMOKE_KWARGS = {
 def collect() -> dict:
     """{metric_name: {"us": float, "derived": str}} over the suites."""
     from benchmarks import (
-        adapt_bench, fleet_bench, kernel_bench, serve_bench,
+        adapt_bench, fleet_bench, kernel_bench, segment_bench,
+        serve_bench,
     )
 
     metrics: dict = {}
     for name, fn in (
         ("kernel_bench", kernel_bench.run),
+        ("segment_bench", segment_bench.run),
         ("serve_bench", serve_bench.run),
         ("adapt_bench", adapt_bench.run),
         ("fleet_bench", fleet_bench.run),

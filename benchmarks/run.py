@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                         autotuned (open registry space) vs fixed-8
                         end-to-end DP expected-time comparison
   roofline           -> EXPERIMENTS.md §Roofline (reads results/dryrun)
+  segment_bench      -> beyond-paper: fused device-segment dispatch
+                        (plan IR + segment-scope kernel variants) vs
+                        per-layer launch, bit-exact + speedup
   serve_bench        -> beyond-paper: segment-pipelined vs serial
                         serving (EfficientConfiguration.segments() ->
                         repro.serving), throughput + p50/p99
@@ -34,7 +37,8 @@ import time
 def main() -> None:
     from benchmarks import (
         adapt_bench, batch_sweep, efficient_configs, fleet_bench,
-        kernel_bench, profile_layers, roofline, serve_bench,
+        kernel_bench, profile_layers, roofline, segment_bench,
+        serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -55,6 +59,8 @@ def main() -> None:
         ("profile_layers", profile_layers.run,
          {"scale": 0.25, "batch_sizes": (1,), "repeats": 1}
          if quick else {}),
+        ("segment_bench", segment_bench.run,
+         SMOKE_KWARGS["segment_bench"] if quick else {}),
         ("serve_bench", serve_bench.run,
          SMOKE_KWARGS["serve_bench"] if quick else {}),
         ("adapt_bench", adapt_bench.run,

@@ -266,6 +266,89 @@ def layer_time_tpu(spec: LayerSpec, config: str, batch: int) -> float:
     return kern + h2d + d2h
 
 
+def fused_segment_kernel_time_tpu(specs, batch: int) -> float:
+    """Kernel-only seconds for a whole device segment executed as
+    **one** fused dispatch (``kernels.segment_fused.seg_pallas``-style):
+    interior activations live in VMEM, so HBM traffic is a single pass
+    over the segment's edge activations (in their edge encodings) plus
+    every parameter array — intermediate results contribute compute
+    but zero HBM bytes — and exactly one dispatch overhead.
+
+    Compared with the per-layer sum this drops (a) each interior
+    layer's unpacked activation write + read, (b) all but one dispatch
+    overhead; compute is unchanged.  The fused price is therefore
+    <= the per-layer kernel sum by construction, which is what lets
+    the DP/selector prefer fused execution wherever it is applicable.
+    """
+    from repro.kernels.segment_fused import (
+        encoded_shape,
+        infer_in_encoding,
+        segment_out_encoding,
+    )
+
+    specs = tuple(specs)
+    in_enc = infer_in_encoding(specs)
+    out_enc = segment_out_encoding(specs, in_enc)
+
+    compute_ops = 0.0
+    param_bytes = 0.0
+    for spec in specs:
+        dims = gemm_dims_for(spec, batch)
+        if dims is None:
+            # elementwise work still runs on the VPU, just without the
+            # HBM round-trip
+            import numpy as np
+
+            compute_ops += 2 * batch * int(np.prod(spec.in_shape))
+            if spec.kind == "step":
+                param_bytes += spec.units * 4 * 2    # thresh + flip
+        else:
+            compute_ops += dims.vpu_ops
+            param_bytes += dims.w_bytes
+
+    def _edge_bytes(shape, enc) -> float:
+        n = 1
+        for d in encoded_shape(shape, enc):
+            n *= d
+        return batch * n * 4
+
+    traffic = (
+        _edge_bytes(specs[0].in_shape, in_enc)
+        + _edge_bytes(specs[-1].out_shape, out_enc)
+        + param_bytes
+    )
+    core_par = min(TENSOR_CORES, max(batch, 1))
+    compute = compute_ops / (VPU_INT_OPS * core_par)
+    return max(compute, traffic / HBM_BW) + DISPATCH_OVERHEAD
+
+
+def xla_segment_kernel_time_tpu(specs, batch: int, registry=None) -> float:
+    """Kernel-only seconds for a segment jitted as one XLA executable
+    (``seg_xla``): per-layer single-pass traffic (XLA materializes the
+    GEMM outputs but fuses the elementwise tails) with one dispatch
+    for the whole chain.  Sits between the per-layer sum and the fully
+    fused price — elementwise layers fuse into their producers (no
+    separate traffic term), GEMM activations still cross HBM."""
+    total = 0.0
+    for spec in specs:
+        dims = gemm_dims_for(spec, batch)
+        if dims is None:
+            continue                    # fused into the producer GEMM
+        total += gemm_kernel_time_tpu(dims, "xla_fused", registry)
+        total -= DISPATCH_OVERHEAD
+    return total + DISPATCH_OVERHEAD
+
+
+def plan_node_times(plan) -> tuple:
+    """Seconds per plan node — the IR's own kernel/boundary
+    annotations (``core.plan.build_plan`` attributes them with the
+    same charging rule as :func:`segment_times_from_split`: transfers
+    only at placement changes, encoding conversions folded into the
+    op that performs them, fused nodes priced at their profiled fused
+    time)."""
+    return tuple(n.kernel_s + n.boundary_s for n in plan.nodes)
+
+
 def segment_times_from_split(
     segments, kernels, boundaries
 ) -> tuple:

@@ -1,30 +1,33 @@
-"""Build the executable model from an EfficientConfiguration — the JAX
-analogue of the paper's generated CUDA/C++ (§III-E).
+"""Build executables from an EfficientConfiguration — the JAX analogue
+of the paper's generated CUDA/C++ (§III-E), refactored around the
+:mod:`repro.core.plan` IR.
 
-Two build modes:
+There is **one** executor.  Every execution style is a plan shape, not
+a separate driver:
 
-* ``fused=True`` (beyond-paper): one jitted function; layer boundaries
-  between same-placement layers carry no host roundtrip — the
-  optimization the paper names as future work ("data transfer ...
-  takes place before and after every layer's execution ... can be
-  adapted in future works").
-* ``fused=False`` (paper-faithful): a Python driver that executes each
-  layer's jitted implementation separately with an explicit host
-  roundtrip around every non-CPU layer, reproducing the cost structure
-  the profiler measured.
+    config --build_plan(mode)--> SegmentPlan --build_node_fns--> fns
+                                                     |
+                                              run_plan(fns)
 
-The faithful driver honors the mapping policy's transfer semantics:
-for a ``policy="dp"`` configuration (or with ``elide_transfers=True``)
-it keeps the activation on the device across consecutive non-CPU
-layers and only crosses the host boundary where the placement changes
-— exactly the cost model the DP mapper optimizes.
+* ``build_mapped_model(fused=True)`` — the ``"whole"`` plan: one node
+  spanning the network, compiled as a single jitted function (layer
+  boundaries carry no host roundtrip — the optimization the paper
+  names as future work).
+* ``build_mapped_model(fused=False)`` — per-layer plan nodes executed
+  by the Python driver with an explicit sync per node: mode
+  ``"layers"`` crosses the host boundary only at placement changes
+  (the elision the DP priced), mode ``"roundtrip"`` round-trips around
+  every device layer (paper §IV-A).
+* ``build_segment_fns`` — the ``"segments"`` plan: one executable per
+  same-placement segment, consumed by the serving pipeline
+  (``repro.serving.pipeline.SegmentPipeline``).
 
-A third consumer is the serving runtime: :func:`build_segment_fns`
-compiles one jitted callable per *segment* of the configuration
-(``EfficientConfiguration.segments()`` — maximal same-placement layer
-runs), which ``repro.serving.pipeline.SegmentPipeline`` executes as a
-two-stage host/device software pipeline behind the micro-batching
-front end in ``repro.serving.engine.ServingEngine``.
+A plan node with a ``fused_variant`` resolves to a *segment-scope*
+kernel from the variant registry (``repro.kernels.segment_fused``):
+the whole node runs as one fused dispatch with activations staying
+bit-packed between its layers.  Nodes without one compose their
+layers' per-layer implementations under a single jit — bit-exact
+either way, since all arithmetic is integer/bool.
 """
 
 from __future__ import annotations
@@ -32,14 +35,13 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.bnn import layers as L
 from repro.bnn.models import BNNModel
 from repro.core.mapper import EfficientConfiguration
-from repro.core.parallel_config import is_host_config
-from repro.kernels.registry import DEFAULT_REGISTRY
+from repro.core.plan import SegmentPlan, build_plan
+from repro.kernels.registry import DEFAULT_REGISTRY, SCOPE_SEGMENT
 
 
 def _layer_fn(spec, packed, config: str, registry=None) -> Callable:
@@ -84,14 +86,86 @@ def _layer_fns(
     config: EfficientConfiguration,
     registry=None,
 ) -> list:
-    """Per-layer callables under the mapping — the single source both
-    the whole-model drivers and the segment builder compose from."""
+    """Per-layer callables under the mapping — what plan nodes without
+    a fused variant compose from."""
     return [
         _layer_fn(spec, packed, cfg, registry)
         for spec, packed, cfg in zip(
             model.specs, packed_params, config.layer_configs
         )
     ]
+
+
+def build_node_fns(
+    model: BNNModel,
+    packed_params: list,
+    config: EfficientConfiguration,
+    plan: SegmentPlan,
+    registry=None,
+) -> list:
+    """One jitted callable per plan node, in execution order:
+    ``[(PlanNode, fn), ...]``.
+
+    A node carrying a ``fused_variant`` resolves that segment-scope
+    variant's builder over the node's layer slice (one fused dispatch,
+    activations bit-packed between the node's layers); any other node
+    jits the composition of its layers' per-layer implementations.
+    """
+    reg = registry if registry is not None else DEFAULT_REGISTRY
+    fns = _layer_fns(model, packed_params, config, registry)
+    out = []
+    for node in plan.nodes:
+        if node.fused_variant is not None:
+            variant = reg.get(node.fused_variant)
+            if variant.scope != SCOPE_SEGMENT:
+                raise ValueError(
+                    f"plan node [{node.start}:{node.stop}] names "
+                    f"{node.fused_variant!r} as fused variant, but its "
+                    f"registry scope is {variant.scope!r}"
+                )
+            fn = variant.builder(
+                tuple(model.specs[node.start:node.stop]),
+                list(packed_params[node.start:node.stop]),
+                node.in_encoding,
+            )
+        else:
+            fn = _compose(fns[node.start:node.stop])
+        out.append((node, fn))
+    return out
+
+
+def _compose(layer_fns) -> Callable:
+    layer_fns = tuple(layer_fns)
+
+    @jax.jit
+    def fn(x):
+        for f in layer_fns:
+            x = f(x)
+        return x
+
+    return fn
+
+
+def run_plan(node_fns, *, device=None) -> Callable:
+    """The plan interpreter: ``fn(x_words) -> np.ndarray`` walking the
+    nodes with the transfer/sync structure the plan encodes — H2D
+    (``jax.device_put``) before a ``transfer_in`` node, a blocking
+    sync after every node (the per-node cost structure the profiler
+    measured), D2H (``np.asarray``) after a ``transfer_out`` node.
+    Between co-placed nodes the activation stays where it is."""
+    dev = device if device is not None else jax.devices()[0]
+
+    def run(x_words):
+        x = np.asarray(x_words)          # input starts on the host
+        for node, fn in node_fns:
+            if node.transfer_in and not isinstance(x, jax.Array):
+                x = jax.device_put(x, dev)
+            out = fn(x)
+            jax.block_until_ready(out)
+            x = np.asarray(out) if node.transfer_out else out
+        return np.asarray(x)
+
+    return run
 
 
 def build_mapped_model(
@@ -106,51 +180,31 @@ def build_mapped_model(
     """Returns fn(packed_input_words) -> int32 class scores, executing
     each layer with its mapped implementation.
 
+    ``fused=True`` lowers the ``"whole"`` plan and returns its single
+    jitted node directly — one XLA executable, no interior host
+    roundtrips.
+
     ``elide_transfers`` applies to the faithful (``fused=False``)
-    driver only: ``True`` crosses the host boundary solely where
-    consecutive layers change placement, ``False`` round-trips around
-    every non-CPU layer (paper §IV-A).  ``None`` follows the mapping
-    policy — DP configurations were priced under elision.
+    driver only: ``True`` (plan mode ``"layers"``) crosses the host
+    boundary solely where consecutive layers change placement,
+    ``False`` (mode ``"roundtrip"``) round-trips around every non-CPU
+    layer (paper §IV-A).  ``None`` follows the mapping policy — DP
+    configurations were priced under elision.
     """
-    fns = _layer_fns(model, packed_params, config, registry)
-
     if fused:
-        @jax.jit
-        def run(x_words):
-            x = x_words
-            for f in fns:
-                x = f(x)
-            return x
-
-        return run
+        plan = build_plan(config, mode="whole")
+        [(node, fn)] = build_node_fns(
+            model, packed_params, config, plan, registry
+        )
+        return fn
 
     if elide_transfers is None:
         elide_transfers = getattr(config, "policy", "greedy") == "dp"
-
-    jitted = [jax.jit(f) for f in fns]
-    cfgs = config.layer_configs
-
-    def run_faithful(x_words):
-        x = np.asarray(x_words)  # input starts on host
-        for i, (f, cfg) in enumerate(zip(jitted, cfgs)):
-            xd = jnp.asarray(x)
-            out = f(xd)
-            jax.block_until_ready(out)
-            if is_host_config(cfg, registry):
-                x = out
-            elif (
-                elide_transfers
-                and i + 1 < len(cfgs)
-                and not is_host_config(cfgs[i + 1], registry)
-            ):
-                # co-placed successor: stay resident on the device
-                x = out
-            else:
-                # device layers round-trip through the host (§IV-A)
-                x = np.asarray(out)
-        return np.asarray(x)
-
-    return run_faithful
+    plan = build_plan(
+        config, mode="layers" if elide_transfers else "roundtrip"
+    )
+    node_fns = build_node_fns(model, packed_params, config, plan, registry)
+    return run_plan(node_fns)
 
 
 def build_segment_fns(
@@ -159,25 +213,17 @@ def build_segment_fns(
     config: EfficientConfiguration,
     registry=None,
 ) -> list:
-    """One jitted callable per segment of `config`, in execution order.
+    """One executable per segment of `config`, in execution order —
+    the ``"segments"`` plan's node functions.
 
-    Returns ``[(Segment, fn), ...]`` where each fn composes the
-    segment's layer implementations into a single XLA executable —
-    interior layer boundaries carry no host roundtrip, matching the
-    elision the DP mapper priced.  All arithmetic is integer/bool, so
-    composition is bit-exact versus per-layer execution.
+    Returns ``[(PlanNode, fn), ...]``; ``PlanNode`` duck-types
+    ``mapper.Segment`` so existing consumers (the serving pipeline,
+    telemetry observers, the fleet ledger) are unchanged.  Device
+    segments selected for fusion (``config.fused_segments``) execute
+    as one fused kernel with activations bit-packed end to end;
+    everything else composes the per-layer implementations under one
+    jit.  All arithmetic is integer/bool, so both forms are bit-exact
+    versus per-layer execution.
     """
-    fns = _layer_fns(model, packed_params, config, registry)
-
-    def segment_fn(seg):
-        seg_fns = fns[seg.start : seg.stop]
-
-        @jax.jit
-        def run(x):
-            for f in seg_fns:
-                x = f(x)
-            return x
-
-        return run
-
-    return [(seg, segment_fn(seg)) for seg in config.segments()]
+    plan = build_plan(config, mode="segments")
+    return build_node_fns(model, packed_params, config, plan, registry)

@@ -145,6 +145,14 @@ class EfficientConfiguration:
     # candidate variant names per layer, variable-size per layer for
     # autotuned tables.  () on legacy configurations (fixed-8 implied).
     config_space: tuple = ()
+    # fused-segment selections: (start, stop, variant_name, kernel
+    # s/example) per device segment whose profiled segment-scope
+    # variant beat the per-layer kernel sum
+    # (``core.plan.select_fused_segments``).  () = per-layer execution
+    # everywhere (legacy and default).  The per-layer attribution
+    # fields above are untouched by fusion — they remain the
+    # per-layer price; the fused price lives on the plan's nodes.
+    fused_segments: tuple = ()
 
     def segments(self) -> tuple:
         """Maximal same-placement layer runs (:func:`segments_of`) —
@@ -239,16 +247,24 @@ class EfficientConfiguration:
             if self.config_space:
                 entry["candidates"] = list(self.config_space[i])
             layers.append(entry)
-        return json.dumps(
-            {
-                "model": self.model_name,
-                "proper_batch_size": self.proper_batch_size,
-                "policy": self.policy,
-                "layers": layers,
-                "expected_time_per_example": self.expected_time_per_example,
-            },
-            indent=2,
-        )
+        doc = {
+            "model": self.model_name,
+            "proper_batch_size": self.proper_batch_size,
+            "policy": self.policy,
+            "layers": layers,
+            "expected_time_per_example": self.expected_time_per_example,
+        }
+        if self.fused_segments:
+            doc["fused_segments"] = [
+                {
+                    "start": s,
+                    "stop": e,
+                    "variant": name,
+                    "kernel_time_per_example": t,
+                }
+                for s, e, name, t in self.fused_segments
+            ]
+        return json.dumps(doc, indent=2)
 
     @staticmethod
     def from_json(s: str) -> "EfficientConfiguration":
@@ -278,6 +294,15 @@ class EfficientConfiguration:
             config_space=tuple(
                 tuple(x["candidates"]) for x in layers
             ) if has_space else (),
+            fused_segments=tuple(
+                (
+                    int(f["start"]),
+                    int(f["stop"]),
+                    f["variant"],
+                    float(f["kernel_time_per_example"]),
+                )
+                for f in d.get("fused_segments", ())
+            ),
         )
 
 

@@ -78,6 +78,45 @@ class ProfileTable:
     # the layer's operand upload / result download (config-independent)
     h2d_times: dict | None = None
     d2h_times: dict | None = None
+    # segment_times[batch]["start:stop"][variant] -> kernel s/example
+    # for a whole device segment executed as one fused dispatch
+    # (segment-scope variants, ``repro.kernels.segment_fused``) —
+    # the candidate rows ``core.plan.select_fused_segments`` compares
+    # against the span's per-layer kernel sum
+    segment_times: dict | None = None
+
+    @staticmethod
+    def span_key(start: int, stop: int) -> str:
+        return f"{start}:{stop}"
+
+    def segment_variants_for(
+        self, batch: int, start: int, stop: int
+    ) -> tuple:
+        """Segment-scope variant names profiled for the span at
+        `batch` (``()`` when the span was never segment-profiled)."""
+        if self.segment_times is None:
+            return ()
+        row = self.segment_times.get(batch, {}).get(
+            self.span_key(start, stop)
+        )
+        return tuple(row) if row else ()
+
+    def segment_time(
+        self, batch: int, start: int, stop: int, variant: str
+    ) -> float:
+        return self.segment_times[batch][self.span_key(start, stop)][
+            variant
+        ]
+
+    def add_segment_row(
+        self, batch: int, start: int, stop: int, row: dict
+    ) -> None:
+        """Record (merge) a span's segment-variant timings at `batch`."""
+        if self.segment_times is None:
+            self.segment_times = {}
+        self.segment_times.setdefault(batch, {}).setdefault(
+            self.span_key(start, stop), {}
+        ).update(row)
 
     def configs_for(self, batch: int, layer: int) -> tuple:
         """The candidate config names profiled for (batch, layer) —
@@ -138,6 +177,7 @@ class ProfileTable:
                 "kernel_times": by_batch(self.kernel_times),
                 "h2d_times": by_batch(self.h2d_times),
                 "d2h_times": by_batch(self.d2h_times),
+                "segment_times": by_batch(self.segment_times),
             },
             indent=2,
         )
@@ -176,6 +216,7 @@ class ProfileTable:
             kernel_times=by_batch("kernel_times"),
             h2d_times=by_batch("h2d_times"),
             d2h_times=by_batch("d2h_times"),
+            segment_times=by_batch("segment_times"),
         )
 
 
@@ -499,3 +540,80 @@ def autotune_bnn_model(
         prune_factor=prune_factor if time_source == "measured" else None,
         registry=reg,
     )
+
+
+def profile_segment_variants(
+    model: BNNModel,
+    packed_params: list,
+    table: ProfileTable,
+    *,
+    spans: Sequence[tuple],
+    batch_sizes: Sequence[int] | None = None,
+    registry=None,
+    time_source: str = "measured",
+    repeats: int = 3,
+    seed: int = 0,
+    platform: str | None = None,
+) -> ProfileTable:
+    """Profile fused whole-segment execution over `spans` and record
+    the rows on ``table.segment_times`` (the table is updated in place
+    and returned).
+
+    For each ``(start, stop)`` span and each batch size, every
+    *segment-scope* registry variant whose applicability predicate
+    accepts the span's :class:`~repro.kernels.registry.SegmentShape`
+    is timed (measured mode: the real fused executable on this
+    backend, same ``_timeit`` discipline as the per-layer sweep) or
+    priced (analytic mode: the TPU cost model —
+    ``cost_model.fused_segment_kernel_time_tpu`` for single-pass
+    fused variants, ``cost_model.xla_segment_kernel_time_tpu``
+    otherwise).  Times are kernel-only seconds per example: the
+    segment's boundary transfers are unchanged by fusion (same edge
+    operands) and stay priced by the per-layer h2d/d2h rows.
+
+    Spans must be device-resident layer runs of the profiled model —
+    typically ``core.plan.device_spans(config)``.
+    """
+    reg = registry if registry is not None else DEFAULT_REGISTRY
+    if platform is None and time_source == "analytic":
+        platform = "tpu"
+    if batch_sizes is None:
+        batch_sizes = table.batch_sizes
+    from repro.kernels.registry import segment_shape_of
+
+    key = jax.random.PRNGKey(seed)
+    for batch in batch_sizes:
+        if batch not in table.batch_sizes:
+            raise ValueError(
+                f"batch {batch} not profiled (have {table.batch_sizes})"
+            )
+        layer_inputs = None
+        if time_source == "measured":
+            x01 = jax.random.uniform(
+                key, (batch, *model.input_hw, model.in_channels)
+            )
+            x_words = prepare_input_packed(x01)
+            layer_inputs = _capture_layer_inputs(
+                model, packed_params, x_words
+            )
+        for start, stop in spans:
+            specs = tuple(model.specs[start:stop])
+            pp = list(packed_params[start:stop])
+            shape = segment_shape_of(specs, pp, batch)
+            row = {}
+            for v in reg.applicable_segments(shape, platform):
+                if time_source == "analytic":
+                    if v.analytic == "fused":
+                        t = cm.fused_segment_kernel_time_tpu(specs, batch)
+                    else:
+                        t = cm.xla_segment_kernel_time_tpu(
+                            specs, batch, registry=reg
+                        )
+                else:
+                    fn = v.builder(specs, pp)
+                    x_in = layer_inputs[start]
+                    t = _timeit(lambda: fn(x_in), repeats)
+                row[v.name] = t / batch
+            if row:
+                table.add_segment_row(batch, start, stop, row)
+    return table

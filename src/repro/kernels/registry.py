@@ -48,12 +48,30 @@ from typing import Callable
 import jax
 
 from repro.kernels.ref import xnor_gemm_ref
+from repro.kernels.segment_fused import (
+    build_pallas_segment,
+    build_xla_segment,
+    infer_in_encoding,
+    segment_gemm_work,
+    segment_vmem_bytes,
+)
 from repro.kernels.variants import xnor_gemm_variant
 from repro.kernels.xnor_popcount import xnor_gemm_pallas
 
 HOST = "host"
 DEVICE = "device"
 ASPECT_NAMES = ("X", "Y", "Z", "XY", "XZ", "YZ", "XYZ")
+
+# variant scopes: a "layer" variant implements one packed xnor-GEMM
+# dispatch (builder (a, w, k_true) -> out); a "segment" variant
+# implements a whole same-placement layer run as one fused executable
+# (builder (specs, packed_params, in_encoding=None) -> fn(x)).  The
+# two scopes are separate candidate spaces: the per-layer autotuner
+# sweeps layer-scope variants, the segment fuser
+# (``core.plan.select_fused_segments``) sweeps segment-scope ones.
+SCOPE_LAYER = "layer"
+SCOPE_SEGMENT = "segment"
+SCOPES = (SCOPE_LAYER, SCOPE_SEGMENT)
 
 # The paper's 8 names are resolvable without the registry (they predate
 # it, and `core.parallel_config` short-circuits on them so placement
@@ -90,6 +108,31 @@ class GemmShape:
         return self.b * self.p * self.n * self.kw
 
 
+@dataclasses.dataclass(frozen=True)
+class SegmentShape:
+    """Shape of one fused-segment dispatch — what segment-scope
+    applicability predicates see.  ``b`` batch, ``n_layers`` layers in
+    the span, ``work`` total word-level GEMM MACs, ``vmem_bytes``
+    resident footprint (weights + peak intermediate)."""
+
+    b: int
+    n_layers: int
+    work: int
+    vmem_bytes: int
+
+
+def segment_shape_of(specs, packed_params, batch: int) -> SegmentShape:
+    """The :class:`SegmentShape` of a layer slice at `batch`."""
+    return SegmentShape(
+        b=batch,
+        n_layers=len(tuple(specs)),
+        work=segment_gemm_work(specs, packed_params, batch),
+        vmem_bytes=segment_vmem_bytes(
+            specs, packed_params, infer_in_encoding(specs)
+        ),
+    )
+
+
 def current_platform() -> str:
     """The JAX backend the live profiler times on (``cpu``/``tpu``/…)."""
     return jax.default_backend()
@@ -100,8 +143,11 @@ class KernelVariant:
     """One registered implementation of the packed xnor GEMM."""
 
     name: str
-    builder: Callable            # (a, w, k_true) -> (B, P, N) int32
+    # layer scope: (a, w, k_true) -> (B, P, N) int32
+    # segment scope: (specs, packed_params, in_encoding=None) -> fn(x)
+    builder: Callable
     placement: str = DEVICE      # HOST or DEVICE (mapper boundary model)
+    scope: str = SCOPE_LAYER     # SCOPE_LAYER or SCOPE_SEGMENT
     # analytic-pricing metadata (core.cost_model): grid order comes from
     # `aspects`, block sizes from p_blk/n_blk (None -> model defaults),
     # `analytic` picks the traffic model: "tiled" (loop-nest reuse),
@@ -138,6 +184,11 @@ class VariantRegistry:
             raise ValueError(
                 f"variant {variant.name!r}: placement must be "
                 f"{HOST!r} or {DEVICE!r}, got {variant.placement!r}"
+            )
+        if variant.scope not in SCOPES:
+            raise ValueError(
+                f"variant {variant.name!r}: scope must be one of "
+                f"{SCOPES}, got {variant.scope!r}"
             )
         if variant.name in self._variants and not replace:
             raise ValueError(
@@ -184,12 +235,33 @@ class VariantRegistry:
     def applicable(
         self, shape: GemmShape, platform: str | None = None
     ) -> tuple:
-        """Variants timeable for `shape` on `platform`, registration
-        order (the autotuner's candidate list)."""
+        """Layer-scope variants timeable for `shape` on `platform`,
+        registration order (the autotuner's candidate list).  Segment
+        variants are a different dispatch granularity and never appear
+        here — they are swept by :meth:`applicable_segments`."""
         platform = platform if platform is not None else current_platform()
         return tuple(
             v for v in self._variants.values()
-            if v.applies_to(shape, platform)
+            if v.scope == SCOPE_LAYER and v.applies_to(shape, platform)
+        )
+
+    def applicable_segments(
+        self, shape: SegmentShape, platform: str | None = None
+    ) -> tuple:
+        """Segment-scope variants timeable for a fused span of `shape`
+        on `platform` (``core.profiler.profile_segment_variants``'s
+        candidate list)."""
+        platform = platform if platform is not None else current_platform()
+        return tuple(
+            v for v in self._variants.values()
+            if v.scope == SCOPE_SEGMENT and v.applies_to(shape, platform)
+        )
+
+    def segment_names(self) -> tuple:
+        """Names of the registered segment-scope variants."""
+        return tuple(
+            v.name for v in self._variants.values()
+            if v.scope == SCOPE_SEGMENT
         )
 
     def placement_of(self, name: str) -> str:
@@ -210,6 +282,29 @@ def _pallas_builder(p_blk: int, n_blk: int) -> Callable:
 def _pallas_applicable(shape: GemmShape, platform: str) -> bool:
     # native on TPU; interpret mode elsewhere only for small problems
     return platform == "tpu" or shape.work <= PALLAS_INTERPRET_MAX_WORK
+
+
+# the fused kernel keeps every weight + the widest intermediate
+# resident; leave headroom under the ~128 MiB v5e VMEM for Mosaic's
+# own buffers
+SEGMENT_VMEM_BUDGET = 96 * 1024 * 1024
+
+
+def _seg_pallas_builder(specs, packed_params, in_encoding=None):
+    return build_pallas_segment(
+        specs, packed_params, in_encoding,
+        interpret=current_platform() != "tpu",
+    )
+
+
+def _seg_pallas_applicable(shape: SegmentShape, platform: str) -> bool:
+    if shape.vmem_bytes > SEGMENT_VMEM_BUDGET:
+        return False
+    return platform == "tpu" or shape.work <= PALLAS_INTERPRET_MAX_WORK
+
+
+def _seg_xla_applicable(shape: SegmentShape, platform: str) -> bool:
+    return True
 
 
 def _register_defaults(reg: VariantRegistry) -> VariantRegistry:
@@ -264,6 +359,37 @@ def _register_defaults(reg: VariantRegistry) -> VariantRegistry:
                 f"{p_blk}x{n_blk} window/neuron tiles",
             )
         )
+    reg.register(
+        KernelVariant(
+            name="seg_xla",
+            builder=build_xla_segment,
+            placement=DEVICE,
+            scope=SCOPE_SEGMENT,
+            aspects=("X", "Y", "Z"),
+            # segment-scope analytic dispatch: "fused" prices the
+            # single-pass mega-kernel, anything else the XLA-composed
+            # chain (core.cost_model.xla_segment_kernel_time_tpu)
+            analytic="tiled",
+            applicable=_seg_xla_applicable,
+            description="whole segment as one XLA executable — the "
+            "layer chain jitted together, threshold/repack fused into "
+            "the GEMM tails",
+        )
+    )
+    reg.register(
+        KernelVariant(
+            name="seg_pallas",
+            builder=_seg_pallas_builder,
+            placement=DEVICE,
+            scope=SCOPE_SEGMENT,
+            aspects=("X",),
+            analytic="fused",
+            applicable=_seg_pallas_applicable,
+            description="whole segment as one pallas_call: weights "
+            "VMEM-resident, activations bit-packed end to end, "
+            "interior results never touch HBM",
+        )
+    )
     return reg
 
 

@@ -158,9 +158,14 @@ class ServingEngine:
     def _apply_swap(self, config: EfficientConfiguration) -> None:
         # reprice-only swaps (same mapping, corrected expectations —
         # the controller's calibration case) keep the compiled
-        # pipeline: the executables depend only on layer_configs, and
-        # a pointless re-jit would stall the serving hot path
-        if config.layer_configs != self.config.layer_configs:
+        # pipeline: the executables depend only on layer_configs and
+        # the fused-segment selections, and a pointless re-jit would
+        # stall the serving hot path
+        if (
+            config.layer_configs != self.config.layer_configs
+            or getattr(config, "fused_segments", ())
+            != getattr(self.config, "fused_segments", ())
+        ):
             # build first, publish second: a failed build
             # (unregistered variant, bad mapping) must leave the old
             # config serving

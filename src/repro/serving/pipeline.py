@@ -53,9 +53,10 @@ import jax
 import numpy as np
 
 from repro.bnn.models import BNNModel
-from repro.core.mapped_model import build_segment_fns
+from repro.core.mapped_model import build_node_fns
 from repro.core.mapper import EfficientConfiguration
 from repro.core.parallel_config import CPU, FULL_GPU
+from repro.core.plan import SegmentPlan, build_plan
 
 
 def canonical_mixed_mapping(model: BNNModel) -> tuple:
@@ -71,8 +72,18 @@ def canonical_mixed_mapping(model: BNNModel) -> tuple:
 
 
 class SegmentPipeline:
-    """Compiled per-segment executables plus serial and pipelined
-    drivers over them."""
+    """Compiled executables for a ``"segments"``-mode
+    :class:`~repro.core.plan.SegmentPlan`, plus serial and pipelined
+    drivers over its nodes.
+
+    The pipeline schedules **plan nodes**: the plan (built once from
+    the configuration, or passed in pre-built) fixes each node's
+    placement, boundary transfers and fused-variant choice; the
+    drivers below only decide *when* each node runs and where the
+    Python thread blocks.  Plan nodes duck-type ``mapper.Segment``,
+    so observers and telemetry consumers see the same interface as
+    before the IR existed.
+    """
 
     def __init__(
         self,
@@ -81,9 +92,21 @@ class SegmentPipeline:
         config: EfficientConfiguration,
         *,
         device=None,
+        plan: SegmentPlan | None = None,
+        registry=None,
     ):
         self.config = config
-        self.segment_fns = build_segment_fns(model, packed_params, config)
+        if plan is None:
+            plan = build_plan(config, mode="segments")
+        elif plan.mode != "segments":
+            raise ValueError(
+                f"SegmentPipeline schedules 'segments'-mode plans, "
+                f"got mode {plan.mode!r}"
+            )
+        self.plan = plan
+        self.segment_fns = build_node_fns(
+            model, packed_params, config, plan, registry
+        )
         self.device = device if device is not None else jax.devices()[0]
 
     @property

@@ -102,13 +102,24 @@ def signature_from_labels(model_name: str, layer_labels) -> str:
 
 def registry_hash(registry=None) -> str:
     """Hash of the kernel-variant space: every registered name with its
-    placement and pricing metadata, order-independent."""
+    scope, placement and pricing metadata, order-independent.  The
+    scope is part of the row, so a registry with segment-scope (fused)
+    variants keys different entries than a per-layer-only one — fused
+    and per-layer stores never cross-contaminate."""
     if registry is None:
         from repro.kernels.registry import DEFAULT_REGISTRY
 
         registry = DEFAULT_REGISTRY
     rows = sorted(
-        (v.name, v.placement, tuple(v.aspects), v.p_blk, v.n_blk, v.analytic)
+        (
+            v.name,
+            getattr(v, "scope", "layer"),
+            v.placement,
+            tuple(v.aspects),
+            v.p_blk,
+            v.n_blk,
+            v.analytic,
+        )
         for v in registry
     )
     return _digest(rows)
@@ -246,12 +257,22 @@ class ProfileStore:
         sig = signature_from_labels(table.model_name, table.layer_labels)
         path = self.profile_path(sig, table.batch_sizes)
         path.parent.mkdir(parents=True, exist_ok=True)
+        spans = sorted(
+            {
+                span
+                for rows in (table.segment_times or {}).values()
+                for span in rows
+            }
+        )
         doc = self._envelope(
             "profile_table",
             {
                 "model": sig,
                 "model_name": table.model_name,
                 "batch_sizes": list(table.batch_sizes),
+                # spans with fused segment-variant rows (informational,
+                # for `inspect` — () on per-layer-only tables)
+                "segment_spans": spans,
             },
             json.loads(table.to_json()),
         )
@@ -297,6 +318,7 @@ class ProfileStore:
             sig, config.policy, config.proper_batch_size
         )
         path.parent.mkdir(parents=True, exist_ok=True)
+        fused = getattr(config, "fused_segments", ())
         doc = self._envelope(
             "efficient_configuration",
             {
@@ -304,6 +326,11 @@ class ProfileStore:
                 "model_name": config.model_name,
                 "batch": config.proper_batch_size,
                 "policy": config.policy,
+                # surfaced (not verified) so `inspect` can tell fused
+                # and per-layer mappings apart without parsing payloads
+                "fused_variants": sorted(
+                    {name for _, _, name, _ in fused}
+                ),
             },
             json.loads(config.to_json()),
         )

@@ -1,0 +1,378 @@
+"""SegmentPlan IR: encoding chain invariants, boundary/transfer rules,
+pricing consistency, and the plan executor vs the pre-refactor faithful
+driver (bit-exactness property, inlined reference implementation)."""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.bnn import build_model
+from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
+from repro.core.mapped_model import (
+    _layer_fns,
+    build_mapped_model,
+    build_segment_fns,
+)
+from repro.core.mapper import (
+    DEVICE,
+    HOST,
+    configuration_from_mapping,
+    map_efficient_configuration,
+)
+from repro.core.parallel_config import CPU, FULL_GPU, is_host_config
+from repro.core.plan import (
+    MODES,
+    PACKED,
+    UNPACKED,
+    PlanError,
+    SegmentPlan,
+    boundary_encoding_changes,
+    build_plan,
+    device_spans,
+    encoding_conversions,
+    kind_of_label,
+    layer_encodings,
+    select_fused_segments,
+)
+from repro.core.profiler import profile_bnn_model, profile_segment_variants
+
+
+def _model_and_table(name="fashion_mnist", scale=0.25, batches=(1, 2)):
+    m = build_model(name, scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(
+        m, packed, batch_sizes=batches, time_source="analytic"
+    )
+    return m, packed, table
+
+
+def _mixed_mapping(m):
+    return tuple(
+        FULL_GPU if s.kind in ("conv", "fc") else CPU for s in m.specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Encoding chain
+# ---------------------------------------------------------------------------
+
+
+def test_kind_of_label():
+    assert kind_of_label("L1:C64") == "conv"
+    assert kind_of_label("L2:S") == "step"
+    assert kind_of_label("L3:MP14") == "mp"
+    assert kind_of_label("L7:FLAT") == "flat"
+    assert kind_of_label("L8:FC128") == "fc"
+    with pytest.raises(PlanError):
+        kind_of_label("L9:Q7")
+
+
+def test_layer_encodings_chain_from_packed_input():
+    m = build_model("fashion_mnist", scale=0.25)
+    kinds = tuple(s.kind for s in m.specs)
+    encs = layer_encodings(kinds)
+    assert encs[0][0] == PACKED            # prepare_input_packed
+    for (a_in, a_out), (b_in, _) in zip(encs, encs[1:]):
+        assert a_out == b_in               # adjacent ops always agree
+    # conv/fc unpack, step repacks, mp/flat preserve
+    for kind, (e_in, e_out) in zip(kinds, encs):
+        if kind in ("conv", "fc"):
+            assert (e_in, e_out) == (PACKED, UNPACKED)
+        elif kind == "step":
+            assert (e_in, e_out) == (UNPACKED, PACKED)
+        else:
+            assert e_in == e_out
+
+
+def test_layer_encodings_rejects_unchainable_sequences():
+    # conv produces unpacked pre-activations; a second conv demands
+    # packed words — no bit-exact executor exists for that chain
+    with pytest.raises(PlanError, match="encoding mismatch"):
+        layer_encodings(("conv", "conv"))
+    # step thresholds unpacked input; the network input is packed
+    with pytest.raises(PlanError, match="encoding mismatch"):
+        layer_encodings(("step",))
+    with pytest.raises(PlanError, match="unknown layer kind"):
+        layer_encodings(("conv", "softmax"))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: co-placed adjacent layers never unpack/repack between them
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("mapping_kind", ["mixed", "all_device"])
+def test_no_encoding_change_ever_crosses_an_op_boundary(
+    mode, mapping_kind
+):
+    """The invariant the IR proves: conversions live *inside* the op
+    that changes encoding, so no executor packs/unpacks between
+    co-placed adjacent layers — in any plan mode, under any mapping."""
+    m, packed, table = _model_and_table()
+    mapping = (
+        _mixed_mapping(m)
+        if mapping_kind == "mixed"
+        else tuple(FULL_GPU for _ in m.specs)
+    )
+    ec = configuration_from_mapping(table, 2, mapping)
+    plan = build_plan(ec, mode=mode)
+    assert boundary_encoding_changes(plan) == ()
+
+
+@pytest.mark.parametrize("mapping_kind", ["mixed", "all_device", "dp"])
+def test_encoding_cost_charged_exactly_once_per_change(mapping_kind):
+    """Each encoding change appears exactly once (inside its op), and
+    the set of conversions is a property of the *architecture* — the
+    same in every plan mode, so segmenting/fusing never adds a
+    pack/unpack that per-layer execution wouldn't pay."""
+    m, packed, table = _model_and_table()
+    if mapping_kind == "dp":
+        ec = map_efficient_configuration(table, policy="dp")
+    else:
+        mapping = (
+            _mixed_mapping(m)
+            if mapping_kind == "mixed"
+            else tuple(FULL_GPU for _ in m.specs)
+        )
+        ec = configuration_from_mapping(table, 2, mapping)
+
+    kinds = tuple(s.kind for s in m.specs)
+    encs = layer_encodings(kinds)
+    want = tuple(
+        (i, e_in, e_out)
+        for i, (e_in, e_out) in enumerate(encs)
+        if e_in != e_out
+    )
+    per_mode = {
+        mode: encoding_conversions(build_plan(ec, mode=mode))
+        for mode in MODES
+    }
+    for mode, got in per_mode.items():
+        assert got == want, mode
+    # and the charge is priced once: every mode's kernel total is the
+    # same per-layer sum (boundary transfers differ by design)
+    kernels = ec.per_layer_kernel_times or ec.per_layer_times
+    for mode in MODES:
+        plan = build_plan(ec, mode=mode)
+        assert sum(n.kernel_s for n in plan.nodes) == pytest.approx(
+            sum(kernels)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Transfers and pricing
+# ---------------------------------------------------------------------------
+
+
+def test_transfers_only_at_placement_changes():
+    m, packed, table = _model_and_table()
+    ec = configuration_from_mapping(table, 2, _mixed_mapping(m))
+    placements = [
+        seg.placement for seg in ec.segments() for _ in range(len(seg))
+    ]
+    n = len(placements)
+
+    plan = build_plan(ec, mode="layers")
+    for i, node in enumerate(plan.nodes):
+        dev = placements[i] == DEVICE
+        want_in = dev and (i == 0 or placements[i - 1] == HOST)
+        want_out = dev and (i == n - 1 or placements[i + 1] == HOST)
+        assert (node.transfer_in, node.transfer_out) == (
+            want_in, want_out,
+        )
+
+    # paper §IV-A: every device layer round-trips
+    for node in build_plan(ec, mode="roundtrip").nodes:
+        assert node.transfer_in == node.transfer_out == node.on_device
+
+    # segment nodes transfer at their edges only — interior co-placed
+    # layers share no transfer by construction (one node)
+    for node in build_plan(ec, mode="segments").nodes:
+        assert node.transfer_in == node.transfer_out == node.on_device
+
+    # the whole-network jit leaves transfers to XLA
+    [whole] = build_plan(ec, mode="whole").nodes
+    assert not whole.transfer_in and not whole.transfer_out
+
+
+def test_segments_plan_prices_match_mapper():
+    m, packed, table = _model_and_table()
+    for policy in ("greedy", "dp"):
+        ec = map_efficient_configuration(table, policy=policy)
+        plan = build_plan(ec, mode="segments")
+        assert plan.expected_time_per_example == pytest.approx(
+            ec.expected_time_per_example
+        )
+        assert plan.node_times() == pytest.approx(
+            ec.segment_expected_times()
+        )
+        assert plan.batch == ec.proper_batch_size
+        assert plan.policy == policy
+
+
+def test_plan_nodes_duck_type_segments():
+    m, packed, table = _model_and_table()
+    ec = configuration_from_mapping(table, 2, _mixed_mapping(m))
+    plan = build_plan(ec, mode="segments")
+    for node, seg in zip(plan.nodes, ec.segments()):
+        assert (node.start, node.stop) == (seg.start, seg.stop)
+        assert node.placement == seg.placement
+        assert node.on_device == seg.on_device
+        assert node.configs == seg.configs
+        assert len(node) == len(seg)
+
+
+def test_plan_json_roundtrip():
+    m, packed, table = _model_and_table()
+    ec = map_efficient_configuration(table, policy="dp")
+    for mode in MODES:
+        plan = build_plan(ec, mode=mode)
+        again = SegmentPlan.from_json(plan.to_json())
+        assert again == plan
+        d = json.loads(plan.to_json())
+        assert d["mode"] == mode
+
+
+def test_unknown_mode_rejected():
+    m, packed, table = _model_and_table()
+    ec = map_efficient_configuration(table, policy="dp")
+    with pytest.raises(PlanError, match="unknown plan mode"):
+        build_plan(ec, mode="wavefront")
+
+
+# ---------------------------------------------------------------------------
+# Fused pricing: min over a superset that contains per-layer
+# ---------------------------------------------------------------------------
+
+
+def test_fused_plan_never_priced_worse_than_per_layer():
+    """select_fused_segments takes min(per-layer kernel sum, profiled
+    segment variants) per device span, so the fused plan's total is <=
+    the per-layer plan's — the DP's config space with segment variants
+    is a superset of the per-layer-only space."""
+    m, packed, table = _model_and_table()
+    for mapping in (
+        _mixed_mapping(m), tuple(FULL_GPU for _ in m.specs),
+    ):
+        ec = configuration_from_mapping(table, 2, mapping)
+        profile_segment_variants(
+            m, packed, table,
+            spans=device_spans(ec),
+            batch_sizes=(2,),
+            time_source="analytic",
+        )
+        fused = select_fused_segments(ec, table)
+        base = build_plan(ec, mode="segments")
+        plan = build_plan(fused, mode="segments")
+        assert (
+            plan.expected_time_per_example
+            <= base.expected_time_per_example
+        )
+        kernels = ec.per_layer_kernel_times or ec.per_layer_times
+        for start, stop, name, t in fused.fused_segments:
+            # recorded winners are strict wins over per-layer
+            assert t < sum(kernels[start:stop])
+            node = next(
+                nd for nd in plan.nodes if (nd.start, nd.stop) == (start, stop)
+            )
+            assert node.fused_variant == name
+            assert node.kernel_s == pytest.approx(t)
+
+
+# ---------------------------------------------------------------------------
+# The plan executor vs the pre-refactor faithful driver
+# ---------------------------------------------------------------------------
+
+
+def _pre_refactor_faithful(model, packed, config, registry=None,
+                           elide_transfers=True):
+    """The faithful driver exactly as it existed before the plan IR
+    (inlined reference — the refactor must not change its semantics)."""
+    fns = _layer_fns(model, packed, config, registry)
+    jitted = [jax.jit(f) for f in fns]
+    cfgs = config.layer_configs
+
+    def run_faithful(x_words):
+        x = np.asarray(x_words)  # input starts on host
+        for i, (f, cfg) in enumerate(zip(jitted, cfgs)):
+            xd = jnp.asarray(x)
+            out = f(xd)
+            jax.block_until_ready(out)
+            if is_host_config(cfg, registry):
+                x = out
+            elif (
+                elide_transfers
+                and i + 1 < len(cfgs)
+                and not is_host_config(cfgs[i + 1], registry)
+            ):
+                x = out
+            else:
+                x = np.asarray(out)
+        return np.asarray(x)
+
+    return run_faithful
+
+
+_MAPPING_STYLES = ("mixed", "all_device", "all_host", "alternating")
+
+
+def _style_mapping(m, style, rng):
+    if style == "mixed":
+        return _mixed_mapping(m)
+    if style == "all_device":
+        return tuple(FULL_GPU for _ in m.specs)
+    if style == "all_host":
+        return tuple(CPU for _ in m.specs)
+    # random per-layer draw over host + device fixed-8 configs (the
+    # ones a plain profile_bnn_model table prices)
+    pool = (CPU, "X", "XY", FULL_GPU)
+    return tuple(pool[rng.integers(len(pool))] for _ in m.specs)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    style=st.sampled_from(_MAPPING_STYLES),
+    elide=st.booleans(),
+)
+def test_plan_executor_bitexact_vs_prerefactor_driver(
+    seed, style, elide
+):
+    """Property: over random mappings, every plan shape — faithful
+    per-layer (elided and roundtrip), whole-network jit, and the
+    segments plan — is bit-exact against the pre-refactor driver and
+    the packed reference forward."""
+    rng = np.random.default_rng(seed)
+    m, packed, table = _model_and_table(batches=(2,))
+    mapping = _style_mapping(m, style, rng)
+    ec = configuration_from_mapping(table, 2, mapping)
+    x = prepare_input_packed(
+        jax.random.uniform(
+            jax.random.PRNGKey(seed % 997),
+            (2, *m.input_hw, m.in_channels),
+        )
+    )
+    want = np.asarray(forward_packed(m.specs, packed, x))
+    old = _pre_refactor_faithful(
+        m, packed, ec, elide_transfers=elide
+    )(x)
+    assert np.array_equal(want, old)
+
+    new = build_mapped_model(
+        m, packed, ec, fused=False, elide_transfers=elide
+    )(x)
+    assert np.array_equal(old, new)
+    assert np.array_equal(want, np.asarray(
+        build_mapped_model(m, packed, ec, fused=True)(x)
+    ))
+    out = x
+    for _node, fn in build_segment_fns(m, packed, ec):
+        out = fn(out)
+    assert np.array_equal(want, np.asarray(out))

@@ -7,7 +7,13 @@
     python tools/profile_store.py export  [--root DIR] [--out FILE]
 
 ``inspect`` lists every artifact with its key (fingerprint, model,
-registry hash), schema, age and size.  ``gc`` removes artifacts from
+registry hash), schema, age, size and — for mappings — whether the
+configuration executes any segment through a fused segment-scope
+kernel variant (``fused=seg_pallas`` vs ``per-layer``); profile
+tables show how many spans carry fused segment rows.  The registry
+hash already isolates fused and per-layer registries into different
+store keys — this surfaces it so warm-start debugging can tell the
+entries apart at a glance.  ``gc`` removes artifacts from
 older store schemas plus, with ``--max-age-days``, anything older than
 that; it previews by default and deletes only with ``--yes``.
 ``export`` writes the whole store as one self-contained JSON bundle.
@@ -44,18 +50,51 @@ def _fmt_age(age_s: float) -> str:
     return f"{age_s / 86400:.1f}d"
 
 
+def _fused_note(e) -> str:
+    """Fused-vs-per-layer marker for one entry.  Mappings saved since
+    the key carried ``fused_variants`` read straight from the key;
+    older mappings fall back to the payload's ``fused_segments``
+    (absent = per-layer).  Profile tables report how many spans have
+    fused segment rows."""
+    key = e.key
+    if e.kind == "efficient_configuration":
+        names = key.get("fused_variants")
+        if names is None:
+            try:
+                doc = json.loads(e.path.read_text())
+                names = sorted(
+                    {
+                        f["variant"]
+                        for f in doc.get("payload", {}).get(
+                            "fused_segments", ()
+                        )
+                    }
+                )
+            except (OSError, json.JSONDecodeError, KeyError, TypeError):
+                return "fused=?"
+        return "fused=" + (",".join(names) if names else "per-layer")
+    if e.kind == "profile_table":
+        spans = key.get("segment_spans")
+        if spans:
+            return f"segspans={len(spans)}"
+        return "segspans=0"
+    return ""
+
+
 def cmd_inspect(args) -> int:
     store = _store(args.root)
     entries = store.entries()
     for e in entries:
         key = e.key
+        note = _fused_note(e)
         print(
             f"{e.kind:24s} v{e.schema}  {_fmt_age(e.age_s):>6s}  "
             f"{e.size_bytes:>8d}B  "
             f"fp={key.get('fingerprint', '?')}  "
             f"model={key.get('model_name', key.get('model', '?'))}  "
             f"r={key.get('registry', '?')}  "
-            f"{e.path.relative_to(args.root)}"
+            + (f"{note}  " if note else "")
+            + f"{e.path.relative_to(args.root)}"
         )
     print(f"{len(entries)} entries under {args.root}")
     return 0
