@@ -1,0 +1,196 @@
+"""Learned-estimator benchmark: predictor-seeded DP on an unprofiled
+model, plus interference-law calibration accuracy.
+
+**Latency predictor.**  Three training widths of the fashion-MNIST BNN
+are profiled (analytic time source — deterministic in any container)
+through a ``ProfileStore``, which records estimator training rows as a
+side effect of every real profile run.  ``store.predictor()`` fits the
+per-group log-linear regression, and ``predict_table`` synthesizes a
+complete ProfileTable for an **unseen, wider** target model — with
+zero profiling passes on the target, counted by invocation.  The
+predicted table seeds the standard DP mapper; the resulting mapping is
+then *re-priced on the target's real (fully profiled) table* and
+compared against the fully-profiled DP optimum and the uniform
+baselines.
+
+Hard assertions: the predicted path invokes the profiler zero times;
+the predicted table is marked ``provenance="predicted"`` and yields a
+valid mapping; re-priced on the real table, the predictor-seeded
+mapping costs <= ``max_ratio`` (default 1.5x) of the fully-profiled DP
+optimum.
+
+**Interference fit.**  A ledger trace with a planted linear
+interference law (the same synthetic generator the tests use, at
+nonzero noise) is fitted back; the recovered gamma must land within
+10% relative error.
+
+Rows are functional (``us=0`` sentinel): the gates and the derived
+ratios are the result, not wall time.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.mapper import configuration_from_mapping, map_efficient_configuration
+from repro.core.parallel_config import CPU, FULL_GPU
+from repro.core.profiler import profile_bnn_model
+from repro.estimator import InterferenceFit
+from repro.store import ProfileStore
+
+
+def _planted_ledger(gamma: float, *, steps: int, noise: float, seed: int):
+    """Ledger trace embodying ``1 + gamma * co_share`` (shared with
+    ``tests/fixtures.py``; duplicated inline because benchmarks do not
+    import from the test tree)."""
+    import random
+
+    from repro.core.mapper import DEVICE, HOST
+    from repro.fleet import DeviceTimeLedger
+
+    occupancies = {"t0": (0.6, 0.9), "t1": (0.25, 0.55), "t2": (0.9, 0.15)}
+    rng = random.Random(seed)
+    ledger = DeviceTimeLedger(window=steps + 2)
+    shares = {
+        t: (h / (h + d), d / (h + d)) for t, (h, d) in occupancies.items()
+    }
+    co = {
+        t: (
+            sum(s[0] for u, s in shares.items() if u != t),
+            sum(s[1] for u, s in shares.items() if u != t),
+        )
+        for t in occupancies
+    }
+    expected = {
+        t: (h / (1.0 + gamma * co[t][0]), d / (1.0 + gamma * co[t][1]))
+        for t, (h, d) in occupancies.items()
+    }
+    for _ in range(steps):
+        for t, (h, d) in occupancies.items():
+            jit = 1.0 + rng.uniform(-noise, noise)
+            ledger.record(t, HOST, h * jit)
+            ledger.record(t, DEVICE, d * jit)
+            ledger.close_step(t)
+    return ledger, expected
+
+
+def run(
+    train_scales=(0.25, 0.375, 0.5),
+    target_scale: float = 0.75,
+    batch: int = 4,
+    repeats: int = 1,
+    max_ratio: float = 1.5,
+    planted_gamma: float = 1.0,
+    fit_noise: float = 0.15,
+):
+    batches = (1, batch)
+
+    def profiler(repeat_count):
+        def fn(model, packed, *, batch_sizes):
+            return profile_bnn_model(
+                model, packed, batch_sizes=batch_sizes,
+                repeats=repeat_count, time_source="analytic",
+            )
+        return fn
+
+    with tempfile.TemporaryDirectory() as root:
+        store = ProfileStore(root)
+        # -- train: each real profile run feeds the store's row set --
+        for s in train_scales:
+            m = build_model("fashion_mnist", scale=s)
+            packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+            _, loaded = store.get_or_profile(
+                m, packed, profiler(repeats), batch_sizes=batches
+            )
+            assert not loaded
+        pred = store.predictor()
+        assert pred is not None and pred.n_rows > 0
+
+        # -- predict: zero profiling passes on the target ------------
+        target = build_model("fashion_mnist", scale=target_scale)
+        target_packed = pack_params(
+            target.specs, target.init(jax.random.PRNGKey(0))
+        )
+        calls: list = []
+
+        def counted(model, packed, *, batch_sizes):
+            calls.append(model.name)
+            return profiler(repeats)(model, packed, batch_sizes=batch_sizes)
+
+        predicted = pred.predict_table(target, batches)
+        assert predicted.provenance == "predicted"
+        seeded = map_efficient_configuration(
+            predicted, batch_sizes=(batch,), policy="dp"
+        )
+        assert len(seeded.layer_configs) == len(target.specs)
+        assert calls == [], "predicted path must not profile"
+
+        # -- truth: one real profiling pass, then re-price -----------
+        truth_table = counted(
+            target, target_packed, batch_sizes=batches
+        )
+        n_target_profiles = len(calls)
+        truth = map_efficient_configuration(
+            truth_table, batch_sizes=(batch,), policy="dp"
+        )
+        repriced = configuration_from_mapping(
+            truth_table, batch, seeded.layer_configs
+        )
+        ratio = (
+            repriced.expected_time_per_example
+            / truth.expected_time_per_example
+        )
+        assert ratio <= max_ratio, (
+            f"predictor-seeded mapping re-prices at {ratio:.2f}x the "
+            f"fully-profiled DP (bound {max_ratio}x)"
+        )
+        uniform = {
+            name: configuration_from_mapping(
+                truth_table, batch, (cfg,) * len(target.specs)
+            ).expected_time_per_example
+            for name, cfg in (("cpu", CPU), ("gpu", FULL_GPU))
+        }
+
+    # -- interference-law calibration --------------------------------
+    ledger, expected = _planted_ledger(
+        planted_gamma, steps=32, noise=fit_noise, seed=7
+    )
+    law = InterferenceFit.from_ledger(ledger, expected).fit()
+    gamma_err = abs(law.gamma - planted_gamma) / planted_gamma
+    assert gamma_err <= 0.10, (
+        f"fitted gamma {law.gamma:.3f} misses planted "
+        f"{planted_gamma} by {gamma_err:.1%}"
+    )
+
+    cov = pred.coverage()
+    return [
+        (
+            f"estimator/fashion_mnist/s{target_scale}/b{batch}/"
+            "seeded_vs_profiled",
+            0.0,
+            f"reprice_ratio={ratio:.3f}x;"
+            f"bound={max_ratio}x;"
+            f"target_profiles={n_target_profiles};"
+            f"seeded_pred_us="
+            f"{seeded.expected_time_per_example * 1e6:.2f};"
+            f"truth_dp_us={truth.expected_time_per_example * 1e6:.2f};"
+            f"uniform_cpu_us={uniform['cpu'] * 1e6:.2f};"
+            f"uniform_gpu_us={uniform['gpu'] * 1e6:.2f};"
+            f"train_rows={pred.n_rows};"
+            f"groups_fitted={len([k for k, v in cov.items() if v])}",
+        ),
+        (
+            f"estimator/interference/gamma{planted_gamma}/"
+            f"noise{fit_noise}",
+            0.0,
+            f"fitted_gamma={law.gamma:.3f};"
+            f"rel_err={gamma_err:.3f};"
+            f"n_obs={law.n_obs};"
+            f"knots={len(law.knots)};"
+            f"residual={law.residual:.4f}",
+        ),
+    ]

@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   fleet_bench        -> beyond-paper: two-model co-serving
                         (repro.fleet) — joint contention-aware mapping
                         vs both-solo-all-GPU, measured co-run makespan
+  estimator_bench    -> beyond-paper: learned latency estimator
+                        (repro.estimator) — predictor-seeded DP on an
+                        unprofiled model (zero profiling passes) vs
+                        fully-profiled DP, plus planted-gamma
+                        interference-law recovery
 
 The CI regression gate over the tiny-size variants of kernel_bench,
 serve_bench, adapt_bench and fleet_bench lives in
@@ -36,9 +41,9 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        adapt_bench, batch_sweep, efficient_configs, fleet_bench,
-        kernel_bench, profile_layers, roofline, segment_bench,
-        serve_bench,
+        adapt_bench, batch_sweep, efficient_configs, estimator_bench,
+        fleet_bench, kernel_bench, profile_layers, roofline,
+        segment_bench, serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -67,6 +72,10 @@ def main() -> None:
          SMOKE_KWARGS["adapt_bench"] if quick else {}),
         ("fleet_bench", fleet_bench.run,
          SMOKE_KWARGS["fleet_bench"] if quick else {}),
+        # not in bench_smoke: the gates inside the suite are the gate
+        ("estimator_bench", estimator_bench.run,
+         {"train_scales": (0.25, 0.375), "target_scale": 0.5}
+         if quick else {}),
     ]
     print("name,us_per_call,derived")
     for name, fn, kwargs in suites:

@@ -183,6 +183,31 @@ class SegmentTelemetry:
         self.flush()
         return self._stats.get(seg_index)
 
+    def live_s_per_example(
+        self, n_segments: int, *, min_count: int = 1
+    ) -> float | None:
+        """Live per-example seconds for one full step: the summed
+        per-segment EWMAs over the served configuration's
+        ``n_segments`` segments — what ``FleetRouter`` admission
+        prefers over the profiled estimate once telemetry is warm.
+        Returns ``None`` while cold: any segment unobserved, below
+        ``min_count`` samples, or ``n_segments <= 0`` (a partial sum
+        would systematically under-estimate the step and over-admit)."""
+        self.flush()
+        if n_segments <= 0:
+            return None
+        total = 0.0
+        for i in range(n_segments):
+            stats = self._stats.get(i)
+            if (
+                stats is None
+                or stats.count < min_count
+                or math.isnan(stats.ewma)
+            ):
+                return None
+            total += stats.ewma
+        return total
+
     def reset(self) -> None:
         """Drop all samples and the sampling phase — required after a
         configuration swap (segment indices re-key) and after a profile

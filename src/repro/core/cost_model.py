@@ -385,7 +385,7 @@ def segment_times_from_split(
 
 
 def contention_inflation(
-    co_runner_share: float, gamma: float = 1.0
+    co_runner_share: float, gamma: float = 1.0, *, law=None
 ) -> float:
     """Kernel-time inflation factor for a tenant whose co-runners
     occupy ``co_runner_share`` of a processor's time.
@@ -398,7 +398,16 @@ def contention_inflation(
     Linear in the share, so inflation is monotone: adding co-runner
     load never makes a placement look faster — the property the fleet
     mapper's descent relies on (``repro.fleet.scheduler``).
+
+    ``law`` swaps the assumed linear model for a **calibrated** one —
+    any object with ``inflation(share) -> factor`` honoring the
+    fitted-law contract (``repro.estimator.interference``: fixed
+    point 1 at share 0, >= 1, monotone non-decreasing), typically a
+    ``FittedInterference`` recovered from ledger traces.  When given,
+    ``gamma`` is ignored.
     """
+    if law is not None:
+        return float(law.inflation(max(0.0, co_runner_share)))
     if gamma < 0.0:
         raise ValueError("gamma must be non-negative")
     return 1.0 + gamma * max(0.0, co_runner_share)

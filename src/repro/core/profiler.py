@@ -84,6 +84,11 @@ class ProfileTable:
     # the candidate rows ``core.plan.select_fused_segments`` compares
     # against the span's per-layer kernel sum
     segment_times: dict | None = None
+    # where the rows came from: "measured" / "analytic" (the profiler
+    # stamps its time_source) or "predicted" (synthesized by
+    # repro.estimator.LatencyPredictor with zero profiling passes).
+    # None on legacy tables; additive, so the schema stays at 1.
+    provenance: str | None = None
 
     @staticmethod
     def span_key(start: int, stop: int) -> str:
@@ -178,6 +183,7 @@ class ProfileTable:
                 "h2d_times": by_batch(self.h2d_times),
                 "d2h_times": by_batch(self.d2h_times),
                 "segment_times": by_batch(self.segment_times),
+                "provenance": self.provenance,
             },
             indent=2,
         )
@@ -217,6 +223,7 @@ class ProfileTable:
             h2d_times=by_batch("h2d_times"),
             d2h_times=by_batch("d2h_times"),
             segment_times=by_batch("segment_times"),
+            provenance=d.get("provenance"),
         )
 
 
@@ -458,6 +465,7 @@ def _profile(
         kernel_times=kernel_times,
         h2d_times=h2d_times,
         d2h_times=d2h_times,
+        provenance=time_source,
     )
 
 

@@ -128,6 +128,16 @@ class DeviceTimeLedger:
             steps=len(rows),
         )
 
+    def step_rows(self, tenant: str) -> tuple:
+        """The retained **closed** (host_s, device_s) step pairs for
+        `tenant`, oldest first — the raw per-step occupancy
+        :class:`repro.estimator.InterferenceFit` consumes when
+        calibrating the contention law.  The open step is excluded:
+        a partially-accumulated pair would read as a spurious
+        speedup."""
+        with self._lock:
+            return tuple(self._steps.get(tenant, ()))
+
     def shares(self) -> dict:
         """{tenant: (host_share, device_share)} over the retained
         window — each tenant's measured demand profile."""

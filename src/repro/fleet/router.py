@@ -7,7 +7,9 @@ per-tenant :class:`~repro.adapt.RemapController`:
 
 * **submit** — admission control at the door: a request predicted to
   complete past its tenant's deadline (queue depth ahead of it, in
-  batches, times the tenant's expected step time) is *rejected now*
+  batches, times the tenant's expected step time — the **live**
+  telemetry estimate once the engine's ``SegmentTelemetry`` is warm,
+  the profiled prediction while cold) is *rejected now*
   rather than served late — a shed request costs nothing, a late one
   cost a batch slot some other tenant's in-SLO request needed.
   Rejections are counted per tenant (:meth:`stats`).
@@ -46,6 +48,9 @@ class Tenant:
     priority: int = 0             # higher dispatches first
     deadline_s: float = math.inf  # per-request latency SLO
     controller: object = None     # optional RemapController
+    # samples every segment needs before live telemetry replaces the
+    # profiled step estimate in admission
+    live_min_samples: int = 3
     admitted: int = 0
     rejected: int = 0
     # guards this tenant's admission decision + counters: submit() is
@@ -57,11 +62,36 @@ class Tenant:
         default_factory=threading.Lock, repr=False
     )
 
+    def live_step_s(self) -> float | None:
+        """Measured wall seconds for one full engine step, from the
+        engine's segment-telemetry EWMAs — or ``None`` while cold
+        (no telemetry attached, or any segment below
+        ``live_min_samples``).  Hot swaps reset the telemetry, so the
+        estimate automatically falls back to profiled until the new
+        configuration has been observed."""
+        telemetry = getattr(self.engine, "telemetry", None)
+        if telemetry is None:
+            return None
+        cfg = self.engine.config
+        s_ex = telemetry.live_s_per_example(
+            len(cfg.segments()), min_count=self.live_min_samples
+        )
+        if s_ex is None:
+            return None
+        return s_ex * cfg.proper_batch_size
+
     def step_expected_s(self) -> float:
-        """Predicted wall seconds for one full engine step — one
+        """Expected wall seconds for one full engine step — one
         micro-batch of the serving batch size under the tenant's
-        current configuration (hot swaps update this automatically
-        because the engine's config is read live)."""
+        current configuration.  Prefers the live telemetry estimate
+        (:meth:`live_step_s`) so admission tracks what the step
+        actually costs under drift; falls back to the profiled
+        prediction while telemetry is cold (hot swaps update both
+        paths automatically because the engine's config is read
+        live)."""
+        live = self.live_step_s()
+        if live is not None:
+            return live
         cfg = self.engine.config
         return cfg.expected_time_per_example * cfg.proper_batch_size
 
@@ -84,14 +114,18 @@ class FleetRouter:
         priority: int = 0,
         deadline_s: float = math.inf,
         controller=None,
+        live_min_samples: int = 3,
     ) -> Tenant:
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
         if deadline_s <= 0.0:
             raise ValueError("deadline_s must be positive")
+        if live_min_samples < 1:
+            raise ValueError("live_min_samples must be >= 1")
         tenant = Tenant(
             name=name, engine=engine, priority=priority,
             deadline_s=deadline_s, controller=controller,
+            live_min_samples=live_min_samples,
         )
         self._tenants[name] = tenant
         return tenant
@@ -181,6 +215,11 @@ class FleetRouter:
                 "served": t.engine.served,
                 "steps": t.engine.steps,
                 "swaps": t.engine.swaps,
+                # which estimate admission is currently running on
+                "admission": (
+                    "live" if t.live_step_s() is not None
+                    else "profiled"
+                ),
             }
             for t in self._tenants.values()
         }

@@ -106,6 +106,7 @@ class TenantPlan:
     solo_expected_s: float        # per example, uninflated table
     inflated_expected_s: float    # per example, under co-runner load
     weight: float
+    law: object = None            # fitted interference law, if any
 
     @property
     def makespan_s(self) -> float:
@@ -159,11 +160,13 @@ def _shares_of(
 
 
 def tenant_inflations(
-    tenant_shares: Sequence, index: int, *, gamma: float = 1.0
+    tenant_shares: Sequence, index: int, *, gamma: float = 1.0, law=None
 ) -> tuple:
     """(host_factor, device_factor) for tenant `index` given every
     tenant's (host, device) share: co-runners' summed share on each
-    processor, through :func:`contention_inflation`."""
+    processor, through :func:`contention_inflation`.  A fitted `law`
+    (``repro.estimator.FittedInterference``) replaces the linear
+    ``gamma`` model on both processors."""
     co_host = sum(
         s[0] for j, s in enumerate(tenant_shares) if j != index
     )
@@ -171,8 +174,8 @@ def tenant_inflations(
         s[1] for j, s in enumerate(tenant_shares) if j != index
     )
     return (
-        contention_inflation(co_host, gamma),
-        contention_inflation(co_dev, gamma),
+        contention_inflation(co_host, gamma, law=law),
+        contention_inflation(co_dev, gamma, law=law),
     )
 
 
@@ -181,6 +184,7 @@ def joint_makespan(
     configs: Sequence[EfficientConfiguration],
     *,
     gamma: float = 1.0,
+    law=None,
     weights: Sequence[float] | None = None,
     shares=None,
     registry=None,
@@ -188,10 +192,11 @@ def joint_makespan(
     """The fleet objective: max over tenants of weighted per-example
     wall time, each tenant's mapping repriced on its
     contention-inflated table.  `shares` (per-tenant (host, device),
-    e.g. from a ledger) overrides the demand model."""
+    e.g. from a ledger) overrides the demand model; `law` swaps the
+    linear gamma model for a calibrated inflation law."""
     plans = _price_assignment(
-        tables, configs, gamma=gamma, weights=weights, shares=shares,
-        registry=registry,
+        tables, configs, gamma=gamma, law=law, weights=weights,
+        shares=shares, registry=registry,
     )
     return max(t.makespan_s for t in plans)
 
@@ -201,6 +206,7 @@ def _price_assignment(
     configs,
     *,
     gamma,
+    law=None,
     weights=None,
     shares=None,
     names=None,
@@ -211,7 +217,9 @@ def _price_assignment(
     tenant_shares = _shares_of(tables, configs, shares)
     plans = []
     for i, (table, cfg) in enumerate(zip(tables, configs)):
-        host_f, dev_f = tenant_inflations(tenant_shares, i, gamma=gamma)
+        host_f, dev_f = tenant_inflations(
+            tenant_shares, i, gamma=gamma, law=law
+        )
         inflated = inflate_profile(
             table, host_factor=host_f, device_factor=dev_f,
             registry=registry,
@@ -232,6 +240,7 @@ def _price_assignment(
                 solo_expected_s=solo.expected_time_per_example,
                 inflated_expected_s=priced.expected_time_per_example,
                 weight=float(weights[i]),
+                law=law,
             )
         )
     return tuple(plans)
@@ -247,6 +256,7 @@ def map_fleet(
     weights: Sequence[float] | None = None,
     shares=None,
     gamma: float = 1.0,
+    law=None,
     max_rounds: int = 8,
     registry=None,
 ) -> FleetPlan:
@@ -258,7 +268,11 @@ def map_fleet(
     an optional per-tenant list of measured (host, device) occupancy
     pairs — ``DeviceTimeLedger.shares()`` values — overriding the
     demand model per tenant (``None`` entries fall back); ``weights``
-    are relative workload sizes.  Returns a :class:`FleetPlan` whose
+    are relative workload sizes.  ``law`` replaces the linear
+    ``gamma`` model with a calibrated inflation law
+    (``repro.estimator.InterferenceFit().fit()``) — the descent's
+    never-worse guarantee only needs monotonicity, which the
+    fitted-law contract provides.  Returns a :class:`FleetPlan` whose
     ``joint_makespan_s <= baseline_makespan_s`` always holds: the
     descent seeds at the all-GPU fleet assignment and only accepts
     strictly improving moves.
@@ -274,7 +288,7 @@ def map_fleet(
 
     def makespan(assignment) -> float:
         return joint_makespan(
-            tables, assignment, gamma=gamma, weights=weights,
+            tables, assignment, gamma=gamma, law=law, weights=weights,
             shares=shares, registry=registry,
         )
 
@@ -294,7 +308,7 @@ def map_fleet(
         for i, table in enumerate(tables):
             tenant_shares = _shares_of(tables, assignment, shares)
             host_f, dev_f = tenant_inflations(
-                tenant_shares, i, gamma=gamma
+                tenant_shares, i, gamma=gamma, law=law
             )
             inflated = inflate_profile(
                 table, host_factor=host_f, device_factor=dev_f,
@@ -323,7 +337,7 @@ def map_fleet(
 
     return FleetPlan(
         tenants=_price_assignment(
-            tables, assignment, gamma=gamma, weights=weights,
+            tables, assignment, gamma=gamma, law=law, weights=weights,
             shares=shares, names=names, registry=registry,
         ),
         joint_makespan_s=best,

@@ -43,6 +43,14 @@ versioned JSON (``ProfileTable.to_json`` /
 before trusting a payload; unknown newer schemas are refused, not
 misread.  ``tools/profile_store.py`` gives ``inspect`` / ``gc`` /
 ``export`` over the same layout.
+
+**Training rows.**  Every profile run additionally appends estimator
+training rows (``repro.estimator.features``) under
+``training-r<registry>/rows-*.json`` — same envelope, additive kind
+``training_rows`` — so :class:`~repro.estimator.LatencyPredictor`
+accumulates cross-model, cross-run data per (fingerprint, registry,
+scope) key (:meth:`ProfileStore.predictor` /
+``tools/profile_store.py fit``).
 """
 
 from __future__ import annotations
@@ -309,7 +317,105 @@ class ProfileStore:
             return table, True
         table = profile_fn(model, packed_params, batch_sizes=batch_sizes)
         self.save_profile(table)
+        self._record_training_rows(model, table)
         return table, False
+
+    # -- estimator training data -------------------------------------
+    def training_dir(self) -> Path:
+        """Training rows live beside the per-model dirs, keyed by the
+        same (fingerprint, registry, scope) — rows measured under one
+        kernel space or platform never train a predictor for
+        another."""
+        base = self.root / f"v{SCHEMA_VERSION}" / self.fingerprint
+        if self.scope is not None:
+            base = base / f"s-{self.scope}"
+        return base / f"training-r{self.space_hash}"
+
+    def _record_training_rows(self, model, table) -> None:
+        """Every real profile run feeds the estimator's training set —
+        best-effort: extraction failure must never fail the profiling
+        path that produced the table."""
+        try:
+            from repro.estimator.features import training_rows_from_table
+
+            rows = training_rows_from_table(
+                model, table, registry=self._registry
+            )
+            if rows:
+                # keyed by signature + batch sweep, not model name:
+                # width variants of one family share a name, and each
+                # sweep's rows must accumulate, not overwrite
+                sig = signature_from_labels(
+                    table.model_name, table.layer_labels
+                )
+                self.save_training_rows(
+                    rows,
+                    source=(
+                        f"profile:{sig}"
+                        f"-b{_batch_key(table.batch_sizes)}"
+                    ),
+                )
+        except Exception:
+            pass
+
+    def save_training_rows(self, rows, *, source: str | None = None) -> Path:
+        """Persist one batch of estimator training rows
+        (``repro.estimator.features.training_rows_from_table``) as a
+        keyed envelope.  One document per (models, batches) source;
+        re-profiling the same sweep overwrites rather than
+        duplicates."""
+        rows = list(rows)
+        if not rows:
+            raise ValueError("no training rows to save")
+        models = sorted({r.get("model", "?") for r in rows})
+        if source is None:
+            source = _digest(
+                sorted(
+                    (r.get("model", "?"), r.get("batch", 0))
+                    for r in rows
+                )
+            )
+        path = self.training_dir() / f"rows-{_digest([source])}.json"
+        path.parent.mkdir(parents=True, exist_ok=True)
+        doc = self._envelope(
+            "training_rows",
+            {
+                "source": source,
+                "models": models,
+                "n_rows": len(rows),
+            },
+            {"rows": rows},
+        )
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(doc)
+        os.replace(tmp, path)
+        return path
+
+    def load_training_rows(self) -> list:
+        """Every training row stored under this handle's key, across
+        all saved batches — the estimator's training set."""
+        rows: list = []
+        d = self.training_dir()
+        if not d.exists():
+            return rows
+        for path in sorted(d.glob("rows-*.json")):
+            doc = self._open(path, "training_rows")
+            if doc is None:
+                continue
+            rows.extend(doc["payload"].get("rows", ()))
+        return rows
+
+    def predictor(self, **kwargs):
+        """A :class:`~repro.estimator.LatencyPredictor` fitted on the
+        accumulated training rows, or ``None`` when the store has no
+        rows yet — callers fall back to a real profiling pass (and
+        thereby create the first rows)."""
+        from repro.estimator.latency import LatencyPredictor
+
+        rows = self.load_training_rows()
+        if not rows:
+            return None
+        return LatencyPredictor(**kwargs).fit(rows)
 
     # -- mappings ----------------------------------------------------
     def save_mapping(self, config: EfficientConfiguration) -> Path:

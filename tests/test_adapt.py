@@ -30,35 +30,14 @@ from repro.core.profiler import ProfileTable
 from repro.launch.hillclimb import bnn_mapping_hillclimb
 from repro.serving import ServingEngine, canonical_mixed_mapping
 
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-
-def _flat_table(model, batch=4, t=1e-4, up=1e-5, down=1e-5):
-    n = len(model.specs)
-    return ProfileTable(
-        model.name, (batch,),
-        tuple(f"L{s.idx}:{s.notation}" for s in model.specs),
-        times={batch: [
-            {c: t if c == CPU else t + up + down for c in CONFIGS}
-            for _ in range(n)
-        ]},
-        kernel_times={batch: [{c: t for c in CONFIGS} for _ in range(n)]},
-        h2d_times={batch: [up] * n},
-        d2h_times={batch: [down] * n},
-    )
+from fixtures import FakeClock, flat_table, observe_segments
 
 
 @pytest.fixture(scope="module")
 def small():
     m = build_model("fashion_mnist", scale=0.25)
     packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
-    table = _flat_table(m)
+    table = flat_table(m)
     ec = configuration_from_mapping(table, 4, canonical_mixed_mapping(m))
     return m, packed, table, ec
 
@@ -163,14 +142,9 @@ def test_telemetry_validates():
 # ---------------------------------------------------------------------------
 
 
-def _observe(tel, ec, factors, batch=4, n=8):
-    """Feed n steps' worth of observations: predicted * factor."""
-    pred = ec.segment_expected_times()
-    for _ in range(n):
-        for idx, seg in enumerate(ec.segments()):
-            f = factors.get(idx, 1.0)
-            tel.on_segment(idx, seg, pred[idx] * f * batch, batch)
-        tel.flush()                       # step boundary
+# _observe: the shared telemetry feeder (predicted * factor per
+# segment, n steps) now lives in tests/fixtures.py
+_observe = observe_segments
 
 
 def test_no_drift_when_observed_matches_predicted(small):
@@ -345,7 +319,7 @@ def test_swap_must_preserve_serving_batch_size(small):
     """The batcher was sized for the serving batch — a configuration
     priced at another batch is an engine rebuild, not a swap."""
     m, packed, _, ec = small
-    table2 = _flat_table(m, batch=2)
+    table2 = flat_table(m, batch=2)
     engine = ServingEngine(m, packed, ec, clock=FakeClock())
     other = configuration_from_mapping(
         table2, 2, canonical_mixed_mapping(m)
@@ -416,7 +390,7 @@ def test_outputs_bit_exact_before_during_after_swap(swap_at, seed):
     perturbs results."""
     m = build_model("fashion_mnist", scale=0.25)
     packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
-    table = _flat_table(m)
+    table = flat_table(m)
     ec = configuration_from_mapping(table, 4, canonical_mixed_mapping(m))
     ec2 = map_efficient_configuration(table, policy="dp")
     engine = ServingEngine(

@@ -1,0 +1,137 @@
+"""Tests for tools/check_coverage.py — the CI coverage-floor gate.
+
+The gate is pure stdlib (it parses the ``coverage.json`` document
+pytest-cov writes, it does not import coverage.py), so these tests run
+everywhere tier-1 runs, including boxes without pytest-cov installed.
+Synthetic reports are built inline; the shape mirrors pytest-cov's
+``--cov-report=json`` output: ``files.<path>.summary`` with
+``covered_lines`` / ``num_statements``, plus ``totals``.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import check_coverage  # noqa: E402
+
+
+def _report():
+    return {
+        "files": {
+            "src/repro/estimator/latency.py": {
+                "summary": {"covered_lines": 95, "num_statements": 100}
+            },
+            "src/repro/estimator/features.py": {
+                "summary": {"covered_lines": 90, "num_statements": 100}
+            },
+            "src/repro/core/mapper.py": {
+                "summary": {"covered_lines": 40, "num_statements": 100}
+            },
+        },
+        "totals": {
+            "covered_lines": 225,
+            "num_statements": 300,
+            "percent_covered": 75.0,
+        },
+    }
+
+
+def test_path_floor_met():
+    fails = check_coverage.check(
+        _report(), [("src/repro/estimator", 90.0)], None
+    )
+    assert fails == []  # (95 + 90) / 200 = 92.5%
+
+
+def test_path_floor_violated_reports_aggregate():
+    fails = check_coverage.check(
+        _report(), [("src/repro/estimator", 95.0)], None
+    )
+    assert len(fails) == 1
+    assert "92.5%" in fails[0] and "src/repro/estimator" in fails[0]
+
+
+def test_prefix_matches_with_or_without_src():
+    # report paths carry src/, the floor spec may not (or vice versa)
+    fails = check_coverage.check(
+        _report(), [("repro/estimator", 90.0)], None
+    )
+    assert fails == []
+    stripped = {
+        "files": {
+            "repro/estimator/latency.py": {
+                "summary": {"covered_lines": 99, "num_statements": 100}
+            }
+        },
+        "totals": {"percent_covered": 99.0},
+    }
+    assert check_coverage.check(
+        stripped, [("src/repro/estimator", 90.0)], None
+    ) == []
+
+
+def test_prefix_is_a_path_component_boundary():
+    # repro/estimator must not swallow repro/estimator_extras
+    report = {
+        "files": {
+            "src/repro/estimator_extras/x.py": {
+                "summary": {"covered_lines": 0, "num_statements": 100}
+            },
+            "src/repro/estimator/latency.py": {
+                "summary": {"covered_lines": 100, "num_statements": 100}
+            },
+        },
+        "totals": {"percent_covered": 50.0},
+    }
+    assert check_coverage.check(
+        report, [("src/repro/estimator", 90.0)], None
+    ) == []
+
+
+def test_unmatched_prefix_is_a_failure():
+    # a floor over an unmeasured package must fail loudly, not pass
+    fails = check_coverage.check(
+        _report(), [("src/repro/nonexistent", 90.0)], None
+    )
+    assert len(fails) == 1 and "no measured files" in fails[0]
+
+
+def test_total_floor():
+    assert check_coverage.check(_report(), [], 75.0) == []
+    fails = check_coverage.check(_report(), [], 80.0)
+    assert len(fails) == 1 and fails[0].startswith("TOTAL")
+
+
+def test_total_floor_without_percent_field():
+    report = _report()
+    del report["totals"]["percent_covered"]
+    assert check_coverage.check(report, [], 75.0) == []
+    assert len(check_coverage.check(report, [], 76.0)) == 1
+
+
+def test_main_cli_pass_and_fail(tmp_path, capsys):
+    f = tmp_path / "coverage.json"
+    f.write_text(json.dumps(_report()))
+    rc = check_coverage.main([
+        "--file", str(f),
+        "--path-floor", "src/repro/estimator=90",
+        "--total-floor", "70",
+    ])
+    assert rc == 0
+    assert "all floors met" in capsys.readouterr().out
+    rc = check_coverage.main([
+        "--file", str(f),
+        "--path-floor", "src/repro/estimator=99",
+        "--total-floor", "99",
+    ])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "src/repro/estimator" in out and "TOTAL" in out
+
+
+def test_main_missing_report_fails(tmp_path, capsys):
+    rc = check_coverage.main(["--file", str(tmp_path / "nope.json")])
+    assert rc == 1
+    assert "cannot read" in capsys.readouterr().out

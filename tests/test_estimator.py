@@ -1,0 +1,588 @@
+"""Learned latency estimator + calibrated interference law: feature
+extraction, per-group log-linear prediction with held-out recovery on
+an exactly log-linear ground truth, planted-gamma recovery from ledger
+traces, the fitted-law contract (property-tested), law threading
+through the cost model and joint mapper, and the ProfileStore
+training-row loop."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.core.cost_model import contention_inflation
+from repro.core.mapper import map_efficient_configuration
+from repro.core.parallel_config import CONFIGS, CPU, FULL_GPU
+from repro.core.profiler import ProfileTable, profile_bnn_model
+from repro.estimator import (
+    TRAINING_ROW_SCHEMA,
+    FittedInterference,
+    InterferenceFit,
+    InterferenceObservation,
+    LatencyPredictor,
+    boundary_features,
+    feature_vector,
+    fit_gamma,
+    group_key,
+    layer_geometry,
+    training_rows_from_table,
+    variant_meta,
+)
+from repro.fleet import (
+    all_device_configuration,
+    joint_makespan,
+    map_fleet,
+    tenant_inflations,
+)
+from repro.store import ProfileStore
+
+from fixtures import (
+    loglinear_table,
+    planted_gamma_ledger,
+    random_split_table,
+    synthetic_model,
+    tied_table,
+    truth_boundary_s,
+    truth_kernel_s,
+)
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+
+def test_layer_geometry_classes():
+    m = synthetic_model("g")
+    conv = layer_geometry(m.specs[0], 4)
+    assert conv["cls"] == "gemm"
+    assert conv["b"] > 0 and conv["p"] > 0 and conv["n"] > 0
+    assert conv["in_bytes"] > 0 and conv["out_bytes"] > 0
+    step = layer_geometry(m.specs[1], 4)
+    assert step["cls"] == "ew"
+    expect = 4
+    for d in m.specs[1].in_shape:
+        expect *= d
+    assert step["elems"] == expect
+    fc = layer_geometry(m.specs[-1], 2)
+    assert fc["cls"] == "gemm" and fc["b"] == 2
+
+
+def test_variant_meta_placement_analytic_and_aspects():
+    cpu = variant_meta(CPU)
+    assert cpu["placement"] == "host" and cpu["analytic"] == "host"
+    assert cpu["aspects"] == "-"
+    gpu = variant_meta(FULL_GPU)
+    assert gpu["placement"] == "device"
+    assert set("XYZ") <= set(gpu["aspects"])
+    with pytest.raises((KeyError, ValueError)):
+        variant_meta("NOPE")
+
+
+def test_group_key_and_feature_dimensions():
+    m = synthetic_model("g")
+    geom = layer_geometry(m.specs[0], 4)
+    meta = variant_meta(FULL_GPU)
+    assert group_key(geom, meta) == "gemm/device/" + meta["analytic"]
+    assert len(feature_vector(geom, meta)) == 10
+    ew = layer_geometry(m.specs[1], 4)
+    assert len(feature_vector(ew, variant_meta(CPU))) == 3
+    assert len(boundary_features(geom, "h2d")) == 3
+    # h2d keys on operand bytes, d2h on result bytes
+    assert boundary_features(geom, "h2d") != boundary_features(geom, "d2h")
+
+
+def test_training_rows_from_table_extracts_every_measurement():
+    m = synthetic_model("t")
+    table = loglinear_table(m, batches=(1, 4))
+    rows = training_rows_from_table(m, table)
+    assert len(rows) == 2 * len(m.specs) * len(CONFIGS)
+    r = rows[0]
+    assert r["schema"] == TRAINING_ROW_SCHEMA
+    assert r["model"] == "t"
+    assert r["kernel_s"] == table.kernel_time(
+        r["batch"], r["layer"], r["config"]
+    )
+    assert json.loads(json.dumps(rows)) == rows      # JSON-able
+    # spec/label mismatch (unknown model) extracts nothing, not garbage
+    other = synthetic_model("other", conv_units=(16,))
+    assert training_rows_from_table(other, table) == []
+
+
+# ---------------------------------------------------------------------------
+# latency predictor
+# ---------------------------------------------------------------------------
+
+
+def _trained_predictor(batches=(1, 2, 4, 8)):
+    rows = []
+    for name, conv_units, fc_units in (
+        ("train_a", (32, 64), (128, 10)),
+        ("train_b", (48,), (256, 64, 10)),
+        ("train_c", (16, 32, 64), (32, 10)),
+    ):
+        m = synthetic_model(name, conv_units=conv_units, fc_units=fc_units)
+        rows += training_rows_from_table(m, loglinear_table(m, batches))
+    return LatencyPredictor().fit(rows)
+
+
+def test_predictor_recovers_loglinear_truth_on_held_out_model():
+    """The acceptance bound: trained on three models priced by an
+    exactly log-linear cost law, the predictor prices an unseen
+    model's every (layer, config, batch) within a tight relative
+    error — the truth is in the hypothesis class, so residual error
+    is numerics, not model mismatch."""
+    pred = _trained_predictor()
+    held = synthetic_model("held_out", conv_units=(24, 40), fc_units=(96, 10))
+    errs = []
+    for b in (1, 3, 4):                   # 3 is unseen in training
+        for spec in held.specs:
+            geom = layer_geometry(spec, b)
+            for cfg in CONFIGS:
+                meta = variant_meta(cfg)
+                truth = truth_kernel_s(geom, meta)
+                got = pred.predict_kernel_s(geom, meta)
+                errs.append(abs(got - truth) / truth)
+            for direction in ("h2d", "d2h"):
+                truth = truth_boundary_s(geom, direction)
+                got = pred.predict_boundary_s(geom, direction)
+                errs.append(abs(got - truth) / truth)
+    assert max(errs) < 0.05
+    cov = pred.coverage()
+    assert cov["gemm/host/host"] > 0 and any(
+        k.startswith("gemm/device/") for k in cov
+    )
+
+
+def test_predict_table_follows_profiler_semantics():
+    pred = _trained_predictor()
+    held = synthetic_model("held", conv_units=(24,), fc_units=(64, 10))
+    table = pred.predict_table(held, (1, 4))
+    assert table.provenance == "predicted"
+    assert table.model_name == "held"
+    assert table.batch_sizes == (1, 4)
+    assert len(table.layer_labels) == len(held.specs)
+    for b in (1, 4):
+        for i in range(len(held.specs)):
+            for c in table.configs_for(b, i):
+                total = table.times[b][i][c]
+                k = table.kernel_time(b, i, c)
+                assert 0.0 < total < 1e6 and math.isfinite(total)
+                if c == CPU:
+                    assert total == k          # host rows: kernel only
+                else:
+                    assert total == pytest.approx(
+                        k + table.h2d(b, i) + table.d2h(b, i)
+                    )
+    # the predicted table seeds the DP like any measured one
+    ec = map_efficient_configuration(table, policy="dp")
+    assert len(ec.layer_configs) == len(held.specs)
+    assert all(c in CONFIGS for c in ec.layer_configs)
+    assert ec.expected_time_per_example > 0.0
+
+
+def test_predict_table_with_registry_prices_open_variant_space():
+    # a registry widens each gemm layer's candidate row to the same
+    # space autotune_bnn_model sweeps; variants unseen in training are
+    # priced through the fallback chain, never crash
+    from repro.kernels.registry import VariantRegistry, _register_defaults
+
+    reg = _register_defaults(VariantRegistry())
+    pred = _trained_predictor()
+    held = synthetic_model("held_reg", conv_units=(24,), fc_units=(64, 10))
+    table = pred.predict_table(held, (4,), registry=reg)
+    assert table.provenance == "predicted"
+    saw_variant = False
+    for i, spec in enumerate(held.specs):
+        cfgs = set(table.configs_for(4, i))
+        assert set(CONFIGS) <= cfgs
+        geom = layer_geometry(spec, 4)
+        if geom["cls"] == "gemm":
+            assert "xla_fused" in cfgs
+            saw_variant = True
+        else:
+            assert cfgs == set(CONFIGS)  # ew layers stay fixed-8
+        for c in cfgs:
+            t = table.times[4][i][c]
+            assert 0.0 < t < 1e6 and math.isfinite(t)
+    assert saw_variant
+    # the widened table seeds the DP, which may now pick registry
+    # variants — exactly what autotune_bnn_model does on measured data
+    ec = map_efficient_configuration(table, policy="dp")
+    assert all(
+        c in table.configs_for(4, i)
+        for i, c in enumerate(ec.layer_configs)
+    )
+
+
+def test_predictor_fallback_chain_and_clamps():
+    # untrained: global default, never a crash
+    cold = LatencyPredictor()
+    m = synthetic_model("m")
+    geom = layer_geometry(m.specs[0], 4)
+    meta = variant_meta(FULL_GPU)
+    assert cold.predict_kernel_s(geom, meta) == pytest.approx(1e-4)
+    assert cold.predict_boundary_s(geom, "h2d") == 0.0
+    # trained on gemm rows only: an ew layer falls through to the
+    # global median instead of failing
+    rows = [
+        r for r in training_rows_from_table(m, loglinear_table(m))
+        if r["geometry"]["cls"] == "gemm"
+    ]
+    p = LatencyPredictor().fit(rows)
+    ew = layer_geometry(m.specs[1], 4)
+    got = p.predict_kernel_s(ew, variant_meta(CPU))
+    assert 0.0 < got < 1e6 and math.isfinite(got)
+    # rows with garbage targets are dropped, not fitted
+    junk = [dict(rows[0], kernel_s=0.0), dict(rows[0], kernel_s=-1.0)]
+    assert LatencyPredictor().fit(junk).n_rows == 0
+
+
+def test_predictor_json_roundtrip_preserves_predictions():
+    pred = _trained_predictor()
+    back = LatencyPredictor.from_json(pred.to_json())
+    m = synthetic_model("rt", conv_units=(20,), fc_units=(40, 10))
+    for spec in m.specs:
+        geom = layer_geometry(spec, 4)
+        for cfg in CONFIGS:
+            meta = variant_meta(cfg)
+            assert back.predict_kernel_s(geom, meta) == pytest.approx(
+                pred.predict_kernel_s(geom, meta)
+            )
+    assert back.coverage() == pred.coverage()
+    assert back.n_rows == pred.n_rows
+
+
+def test_predictor_validates():
+    with pytest.raises(ValueError):
+        LatencyPredictor(ridge=0.0)
+    with pytest.raises(ValueError):
+        LatencyPredictor(min_rows=0)
+    doc = json.loads(LatencyPredictor().to_json())
+    doc["kind"] = "profile_table"
+    with pytest.raises(ValueError, match="latency_predictor"):
+        LatencyPredictor.from_json(json.dumps(doc))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fitted=st.booleans())
+def test_predicted_tables_never_crash_the_dp(seed, fitted):
+    """The prediction contract: whatever the training set (including
+    none at all) and whatever the model, the predicted table yields a
+    valid DP mapping — finite positive times, one config per layer."""
+    rng = np.random.default_rng(seed)
+    if fitted:
+        m_train = synthetic_model(
+            "tr",
+            conv_units=tuple(
+                int(u) for u in rng.integers(8, 64, rng.integers(1, 3))
+            ),
+            fc_units=(int(rng.integers(16, 256)), 10),
+        )
+        rows = training_rows_from_table(m_train, loglinear_table(m_train))
+        pred = LatencyPredictor().fit(rng.permutation(rows).tolist())
+    else:
+        pred = LatencyPredictor()
+    model = synthetic_model(
+        "probe",
+        conv_units=tuple(
+            int(u) for u in rng.integers(8, 96, rng.integers(1, 4))
+        ),
+        fc_units=(int(rng.integers(16, 512)), 10),
+        hw=int(rng.integers(4, 20)),
+    )
+    batch = int(rng.choice((1, 2, 4, 8)))
+    table = pred.predict_table(model, (batch,))
+    ec = map_efficient_configuration(table, policy="dp")
+    assert len(ec.layer_configs) == len(model.specs)
+    assert math.isfinite(ec.expected_time_per_example)
+    assert ec.expected_time_per_example > 0.0
+
+
+# ---------------------------------------------------------------------------
+# interference fit
+# ---------------------------------------------------------------------------
+
+
+def test_fit_gamma_exact_on_noiseless_linear_data():
+    g = 0.7
+    obs = [
+        InterferenceObservation(share=s, inflation=1.0 + g * s)
+        for s in (0.1, 0.4, 0.8, 1.3)
+    ]
+    assert fit_gamma(obs) == pytest.approx(g)
+    assert fit_gamma([]) == 0.0
+    assert fit_gamma(
+        [InterferenceObservation(share=0.0, inflation=5.0)]
+    ) == 0.0                                   # zero-share: no signal
+    assert fit_gamma(
+        [InterferenceObservation(share=1.0, inflation=0.5)]
+    ) == 0.0                                   # speedup clamps to 0
+
+
+def test_fitted_law_linear_and_piecewise_contract():
+    lin = FittedInterference(gamma=0.5)
+    assert lin.inflation(0.0) == 1.0
+    assert lin.inflation(2.0) == pytest.approx(2.0)
+    pw = FittedInterference(
+        gamma=1.0, knots=((0.5, 1.2), (1.0, 1.8))
+    )
+    assert pw.inflation(0.0) == 1.0
+    assert pw.inflation(0.25) == pytest.approx(1.1)    # interp to knot 1
+    assert pw.inflation(0.75) == pytest.approx(1.5)    # between knots
+    assert pw.inflation(1.0) == pytest.approx(1.8)
+    # past the last knot: linear extrapolation at slope gamma
+    assert pw.inflation(1.5) == pytest.approx(1.8 + 0.5)
+    assert pw.inflation(-1.0) == 1.0                   # clamped domain
+    with pytest.raises(ValueError):
+        FittedInterference(gamma=-0.1)
+
+
+def test_interference_fit_drops_measurement_garbage():
+    fit = InterferenceFit()
+    fit.observe(-0.1, 1.5)        # negative share
+    fit.observe(0.5, 0.0)         # non-positive inflation
+    fit.observe(0.5, -2.0)
+    assert len(fit) == 0
+    fit.observe(0.5, 1.4, placement="host", tenant="a")
+    assert len(fit) == 1
+    assert fit.observations()[0].tenant == "a"
+
+
+def test_planted_gamma_recovered_from_ledger_within_tolerance():
+    """The acceptance criterion: on ledger traces with a planted
+    linear law, the fitted gamma lands within 10% relative error —
+    exactly at zero noise, comfortably inside the bound at 15%
+    multiplicative jitter."""
+    for gamma in (0.35, 1.0, 2.5):
+        ledger, expected = planted_gamma_ledger(gamma)
+        fit = InterferenceFit.from_ledger(ledger, expected)
+        assert len(fit) > 0
+        law = fit.fit(refine=False)
+        assert law.gamma == pytest.approx(gamma, rel=1e-6)
+        assert law.residual == pytest.approx(0.0, abs=1e-9)
+    ledger, expected = planted_gamma_ledger(
+        1.0, steps=32, noise=0.15, seed=7
+    )
+    law = InterferenceFit.from_ledger(ledger, expected).fit()
+    assert abs(law.gamma - 1.0) / 1.0 < 0.10
+    assert law.n_obs > 0
+
+
+def test_refined_law_tracks_a_nonlinear_planted_curve():
+    """Observations from a saturating (concave) law: the piecewise
+    refinement prices mid-range shares better than the pure linear
+    fit, while keeping the monotone contract."""
+    fit = InterferenceFit()
+    shares = [0.05 * i for i in range(1, 41)]
+    for s in shares:
+        fit.observe(s, 1.0 + math.sqrt(s))     # concave ground truth
+    law = fit.fit(max_knots=6, min_per_knot=4)
+    assert law.knots                            # refinement engaged
+    lin = fit.fit(refine=False)
+    err_pw = max(
+        abs(law.inflation(s) - (1.0 + math.sqrt(s))) for s in shares
+    )
+    err_lin = max(
+        abs(lin.inflation(s) - (1.0 + math.sqrt(s))) for s in shares
+    )
+    assert err_pw < err_lin
+    xs = [0.01 * i for i in range(301)]
+    ys = [law.inflation(x) for x in xs]
+    assert ys == sorted(ys)                     # still monotone
+
+
+def test_interference_law_json_roundtrip():
+    law = FittedInterference(
+        gamma=0.8, knots=((0.4, 1.3), (0.9, 1.7)), n_obs=12,
+        residual=0.05,
+    )
+    back = FittedInterference.from_json(law.to_json())
+    assert back == law
+    with pytest.raises(ValueError, match="interference_law"):
+        FittedInterference.from_json(
+            json.dumps({"kind": "profile_table", "gamma": 1.0})
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), refine=st.booleans())
+def test_fitted_law_contract_holds_for_any_observations(seed, refine):
+    """The property every consumer assumes: whatever garbage-free
+    observation set is fitted — including adversarially non-monotone
+    samples — the law is pinned at (0, 1), never below 1, and monotone
+    non-decreasing in the share."""
+    rng = np.random.default_rng(seed)
+    fit = InterferenceFit()
+    for _ in range(int(rng.integers(0, 60))):
+        fit.observe(
+            float(rng.uniform(0.0, 3.0)),
+            float(rng.uniform(0.2, 6.0)),   # includes speedups < 1
+        )
+    law = fit.fit(refine=refine)
+    assert law.inflation(0.0) == 1.0
+    xs = [0.02 * i for i in range(201)]
+    ys = [law.inflation(x) for x in xs]
+    assert all(y >= 1.0 for y in ys)
+    assert all(b >= a - 1e-12 for a, b in zip(ys, ys[1:]))
+
+
+# ---------------------------------------------------------------------------
+# law threading: cost model, joint mapper
+# ---------------------------------------------------------------------------
+
+
+def test_contention_inflation_prefers_fitted_law():
+    law = FittedInterference(gamma=0.5)
+    # the law overrides gamma entirely (gamma is not even validated)
+    assert contention_inflation(1.0, gamma=99.0, law=law) == 1.5
+    assert contention_inflation(-1.0, law=law) == 1.0   # clamped share
+    pw = FittedInterference(gamma=0.0, knots=((1.0, 3.0), (2.0, 3.0)))
+    assert contention_inflation(0.5, law=pw) == pytest.approx(2.0)
+
+
+def test_tenant_inflations_with_fitted_law():
+    shares = [(0.25, 0.75), (1.0, 0.0)]
+    law = FittedInterference(gamma=2.0)
+    host_f, dev_f = tenant_inflations(shares, 0, law=law)
+    assert host_f == pytest.approx(3.0)     # 1 + 2*1.0
+    assert dev_f == pytest.approx(1.0)      # 1 + 2*0.0
+    # law= with the matching gamma agrees with the plain-gamma path
+    lin = FittedInterference(gamma=1.0)
+    assert tenant_inflations(shares, 1, law=lin) == pytest.approx(
+        tenant_inflations(shares, 1, gamma=1.0)
+    )
+
+
+def test_map_fleet_threads_the_fitted_law():
+    tables = [tied_table("a"), tied_table("b")]
+    law = FittedInterference(gamma=1.0, knots=((0.5, 1.6), (1.0, 2.0)))
+    plan = map_fleet(tables, law=law)
+    assert all(t.law is law for t in plan.tenants)
+    assert plan.joint_makespan_s == pytest.approx(
+        joint_makespan(tables, plan.configs, law=law)
+    )
+    # identity law == no contention: degenerates to the solo DP
+    free = map_fleet(tables, law=FittedInterference(gamma=0.0))
+    for t in free.tenants:
+        assert t.host_inflation == 1.0 and t.device_inflation == 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_map_fleet_never_worse_than_all_gpu_under_fitted_law(seed):
+    """The PR-5 acceptance property survives the law swap: for any
+    pair of tables and any law fitted from random observations, the
+    joint plan's makespan under that law is <= the all-GPU fleet's."""
+    rng = np.random.default_rng(seed)
+    tables = [
+        random_split_table(rng, name="a"),
+        random_split_table(rng, name="b"),
+    ]
+    fit = InterferenceFit()
+    for _ in range(int(rng.integers(4, 40))):
+        fit.observe(
+            float(rng.uniform(0.0, 2.0)), float(rng.uniform(0.5, 4.0))
+        )
+    law = fit.fit()
+    plan = map_fleet(tables, law=law)
+    all_gpu = [all_device_configuration(t) for t in tables]
+    baseline = joint_makespan(tables, all_gpu, law=law)
+    assert plan.baseline_makespan_s == pytest.approx(baseline)
+    assert plan.joint_makespan_s <= baseline + 1e-12
+    assert plan.joint_makespan_s == pytest.approx(
+        joint_makespan(tables, plan.configs, law=law)
+    )
+
+
+# ---------------------------------------------------------------------------
+# store integration: the training-row loop
+# ---------------------------------------------------------------------------
+
+
+def test_store_training_rows_roundtrip(tmp_path):
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    assert store.load_training_rows() == []
+    assert store.predictor() is None
+    m = synthetic_model("s")
+    rows = training_rows_from_table(m, loglinear_table(m))
+    store.save_training_rows(rows)
+    assert store.load_training_rows() == rows
+    # a second batch from another sweep accumulates, not overwrites
+    m2 = synthetic_model("s2", conv_units=(16,))
+    rows2 = training_rows_from_table(m2, loglinear_table(m2))
+    store.save_training_rows(rows2)
+    assert len(store.load_training_rows()) == len(rows) + len(rows2)
+    # re-saving the same source overwrites in place
+    store.save_training_rows(rows)
+    assert len(store.load_training_rows()) == len(rows) + len(rows2)
+    with pytest.raises(ValueError):
+        store.save_training_rows([])
+    # rows are keyed: a different fingerprint sees nothing
+    other = ProfileStore(tmp_path, fingerprint="other")
+    assert other.load_training_rows() == []
+
+
+def test_store_get_or_profile_feeds_the_predictor(tmp_path):
+    """The closing of the loop: every real profile run records
+    training rows, and ``store.predictor()`` fits on them."""
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    m = synthetic_model("fed", conv_units=(24, 48), fc_units=(64, 10))
+    calls = []
+
+    def fake_profiler(model, packed, *, batch_sizes):
+        calls.append(model.name)
+        return loglinear_table(model, batch_sizes)
+
+    table, loaded = store.get_or_profile(
+        m, None, fake_profiler, batch_sizes=(1, 4)
+    )
+    assert not loaded and calls == ["fed"]
+    rows = store.load_training_rows()
+    assert len(rows) == 2 * len(m.specs) * len(CONFIGS)
+    pred = store.predictor()
+    assert pred is not None and pred.n_rows == len(rows)
+    # the fitted predictor prices the profiled model close to truth
+    geom = layer_geometry(m.specs[0], 4)
+    meta = variant_meta(FULL_GPU)
+    assert pred.predict_kernel_s(geom, meta) == pytest.approx(
+        truth_kernel_s(geom, meta), rel=0.05
+    )
+    # warm start: the stored table is served with zero profiling and
+    # no duplicate training rows
+    _, loaded = store.get_or_profile(
+        m, None, fake_profiler, batch_sizes=(1, 4)
+    )
+    assert loaded and calls == ["fed"]
+    assert len(store.load_training_rows()) == len(rows)
+
+
+# ---------------------------------------------------------------------------
+# table provenance
+# ---------------------------------------------------------------------------
+
+
+def test_profile_table_provenance_roundtrip_and_legacy():
+    m = synthetic_model("prov")
+    t = loglinear_table(m)
+    assert t.provenance == "analytic"
+    back = ProfileTable.from_json(t.to_json())
+    assert back.provenance == "analytic"
+    legacy = json.loads(t.to_json())
+    del legacy["provenance"]
+    assert ProfileTable.from_json(json.dumps(legacy)).provenance is None
+
+
+def test_profiler_stamps_provenance():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    table = profile_bnn_model(
+        m, packed, batch_sizes=(1,), repeats=1, time_source="analytic"
+    )
+    assert table.provenance == "analytic"

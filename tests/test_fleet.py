@@ -32,49 +32,15 @@ from repro.fleet import (
     map_fleet,
     tenant_inflations,
 )
+from repro.adapt import SegmentTelemetry
 from repro.serving import ServingEngine, canonical_mixed_mapping
 
-
-def _random_split_table(rng, n_layers=5, batches=(1, 4), name="synthetic"):
-    kernel, times, h2d, d2h = {}, {}, {}, {}
-    for b in batches:
-        kernel[b], times[b], h2d[b], d2h[b] = [], [], [], []
-        for _ in range(n_layers):
-            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
-            up = float(rng.uniform(1e-6, 5e-4))
-            down = float(rng.uniform(1e-6, 5e-4))
-            times[b].append({
-                c: krow[c] if c == CPU else krow[c] + up + down
-                for c in CONFIGS
-            })
-            kernel[b].append(krow)
-            h2d[b].append(up)
-            d2h[b].append(down)
-    return ProfileTable(
-        name, tuple(batches),
-        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
-        kernel_times=kernel, h2d_times=h2d, d2h_times=d2h,
-    )
-
-
-def _tied_table(name, n_layers=4, batch=4, cpu=1.0, gpu=0.9, bnd=0.005):
-    """CPU and device near-tied per layer — the regime where joint
-    mapping has a genuine placement choice."""
-    times = {batch: [
-        {c: cpu if c == CPU else gpu + 2 * bnd for c in CONFIGS}
-        for _ in range(n_layers)
-    ]}
-    kernels = {batch: [
-        {c: cpu if c == CPU else gpu for c in CONFIGS}
-        for _ in range(n_layers)
-    ]}
-    return ProfileTable(
-        name, (batch,),
-        tuple(f"L{i+1}:C64" for i in range(n_layers)), times,
-        kernel_times=kernels,
-        h2d_times={batch: [bnd] * n_layers},
-        d2h_times={batch: [bnd] * n_layers},
-    )
+from fixtures import (
+    FakeClock,
+    observe_segments,
+    random_split_table as _random_split_table,
+    tied_table as _tied_table,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +302,8 @@ def test_router_admission_sheds_past_deadline(two_tenants):
     m, packed, table, ec = two_tenants
     router = FleetRouter()
     engine = ServingEngine(
-        m, packed, ec, allowed_batch_sizes=table.batch_sizes
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        clock=FakeClock(),
     )
     step_s = ec.expected_time_per_example * ec.proper_batch_size
     t = router.add_tenant("a", engine, deadline_s=1.5 * step_s)
@@ -353,7 +320,8 @@ def test_router_admission_sheds_past_deadline(two_tenants):
     assert stats["rejected"] == 1 and stats["admitted"] == 4
     # an infinite deadline never sheds, whatever the backlog
     relaxed = router.add_tenant("b", ServingEngine(
-        m, packed, ec, allowed_batch_sizes=table.batch_sizes
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        clock=FakeClock(),
     ))
     assert math.isinf(relaxed.deadline_s)
     assert all(
@@ -369,8 +337,11 @@ def test_router_dispatch_order_priority_then_deadline(two_tenants):
     m, packed, table, ec = two_tenants
 
     def engine():
+        # injected clock: `ready()` must stay false on partial batches
+        # no matter how slowly a loaded CI runner reaches the assert
         return ServingEngine(
-            m, packed, ec, allowed_batch_sizes=table.batch_sizes
+            m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+            clock=FakeClock(),
         )
 
     router = FleetRouter()
@@ -384,7 +355,7 @@ def test_router_dispatch_order_priority_then_deadline(two_tenants):
         router.tenant(name).engine.submit(xw)
     order = [t.name for t in router._dispatch_order(force=True)]
     assert order == ["hi", "tight", "low"]
-    # nothing ready without force (partial batches, fresh clock)
+    # nothing ready without force (partial batches, frozen clock)
     assert router._dispatch_order(force=False) == []
 
 
@@ -452,3 +423,98 @@ def test_router_co_serves_two_models_bit_exact(two_tenants):
             ledger.co_runner_share("small", "device"),
         )
     ) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# live-telemetry admission
+# ---------------------------------------------------------------------------
+
+
+def _telemetry_tenant(two_tenants, *, deadline_mult=1.5, min_samples=3):
+    """A one-tenant router whose engine carries SegmentTelemetry and a
+    frozen clock: admission math is fully deterministic and the tests
+    feed telemetry directly (no real engine steps)."""
+    m, packed, table, ec = two_tenants
+    tel = SegmentTelemetry(warmup=0, tenant="a")
+    engine = ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        telemetry=tel, clock=FakeClock(),
+    )
+    step_s = ec.expected_time_per_example * ec.proper_batch_size
+    router = FleetRouter()
+    tenant = router.add_tenant(
+        "a", engine, deadline_s=deadline_mult * step_s,
+        live_min_samples=min_samples,
+    )
+    return router, tenant, tel, ec, step_s
+
+
+def test_router_admission_falls_back_to_profiled_when_cold(two_tenants):
+    router, tenant, tel, ec, step_s = _telemetry_tenant(two_tenants)
+    # cold telemetry: no live estimate, profiled admission
+    assert tenant.live_step_s() is None
+    assert tenant.step_expected_s() == pytest.approx(step_s)
+    assert router.stats()["a"]["admission"] == "profiled"
+    # below live_min_samples stays cold; crossing it goes live
+    observe_segments(tel, ec, {}, n=2)
+    assert tenant.live_step_s() is None
+    observe_segments(tel, ec, {}, n=1)
+    live = tenant.live_step_s()
+    assert live == pytest.approx(step_s, rel=1e-6)
+    assert router.stats()["a"]["admission"] == "live"
+    # a telemetry reset (what a hot swap does) drops back to profiled
+    tel.reset()
+    assert tenant.live_step_s() is None
+    assert router.stats()["a"]["admission"] == "profiled"
+
+
+def test_router_admission_stable_when_telemetry_quiet(two_tenants):
+    """Live admission with telemetry matching the profile must shed
+    exactly like profiled admission: 4 requests fit one batch and the
+    deadline, the 5th implies two batches and sheds."""
+    router, tenant, tel, ec, _ = _telemetry_tenant(two_tenants)
+    observe_segments(tel, ec, {}, n=4)
+    assert router.stats()["a"]["admission"] == "live"
+    xw = np.asarray(prepare_input_packed(
+        jax.random.uniform(jax.random.PRNGKey(0), (1, 28, 28, 1))
+    ))[0]
+    got = [router.submit("a", xw) for _ in range(5)]
+    assert all(r is not None for r in got[:4]) and got[4] is None
+    assert (tenant.admitted, tenant.rejected) == (4, 1)
+
+
+def test_router_admission_sheds_under_drift_profiled_would_admit(
+    two_tenants,
+):
+    """The regression the live estimate exists for: segments running
+    ~9x slower than profiled (EWMA of sustained 10x) must shed the
+    *first* request — profiled admission would have admitted it and
+    served it hopelessly late."""
+    router, tenant, tel, ec, step_s = _telemetry_tenant(two_tenants)
+    observe_segments(tel, ec, {}, n=1)           # seed EWMA at 1x
+    all_slow = {i: 10.0 for i in range(len(ec.segments()))}
+    observe_segments(tel, ec, all_slow, n=8)
+    live = tenant.live_step_s()
+    assert live is not None and live > 5.0 * step_s
+    # profiled estimate says one backlog batch makes the deadline;
+    # the live estimate knows it cannot
+    assert 1 * step_s <= tenant.deadline_s
+    xw = np.asarray(prepare_input_packed(
+        jax.random.uniform(jax.random.PRNGKey(0), (1, 28, 28, 1))
+    ))[0]
+    assert router.submit("a", xw) is None
+    assert (tenant.admitted, tenant.rejected) == (0, 1)
+    # recovery: sustained return to profiled speed re-admits
+    observe_segments(tel, ec, {}, n=24)
+    assert tenant.live_step_s() == pytest.approx(step_s, rel=0.1)
+    assert router.submit("a", xw) is not None
+
+
+def test_router_add_tenant_validates_live_min_samples(two_tenants):
+    m, packed, table, ec = two_tenants
+    engine = ServingEngine(
+        m, packed, ec, allowed_batch_sizes=table.batch_sizes,
+        clock=FakeClock(),
+    )
+    with pytest.raises(ValueError, match="live_min_samples"):
+        FleetRouter().add_tenant("a", engine, live_min_samples=0)

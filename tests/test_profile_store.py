@@ -464,3 +464,34 @@ def test_cli_inspect_gc_export(tmp_path):
     out = _cli("inspect", "--root", str(tmp_path))
     assert out.returncode == 0
     assert "0 entries" in out.stdout
+
+
+def test_cli_fit_trains_on_stored_rows(tmp_path):
+    from fixtures import loglinear_table, synthetic_model
+
+    from repro.estimator import (
+        LatencyPredictor, training_rows_from_table,
+    )
+
+    # an empty store has nothing to fit — distinct exit code
+    out = _cli("fit", "--root", str(tmp_path))
+    assert out.returncode == 1
+    assert "no training rows" in out.stdout
+
+    # rows saved under the *default* fingerprint, which is what the
+    # CLI's handle resolves
+    store = ProfileStore(tmp_path)
+    m = synthetic_model("cli_fit")
+    store.save_training_rows(training_rows_from_table(m, loglinear_table(m)))
+    pred_json = tmp_path / "predictor.json"
+    out = _cli("fit", "--root", str(tmp_path), "--out", str(pred_json))
+    assert out.returncode == 0, out.stderr
+    assert "fitted on" in out.stdout
+    assert "gemm/host/host" in out.stdout
+    pred = LatencyPredictor.from_json(pred_json.read_text())
+    assert pred.n_rows > 0
+
+    # inspect surfaces the training-row artifact with its row count
+    out = _cli("inspect", "--root", str(tmp_path))
+    assert out.returncode == 0
+    assert "training_rows" in out.stdout and "rows=" in out.stdout

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Enforce coverage floors from a ``coverage.json`` report.
+
+    python tools/check_coverage.py --file coverage.json \
+        --path-floor src/repro/estimator=90 --total-floor 60
+
+Reads the JSON report ``pytest --cov ... --cov-report=json:FILE``
+writes and fails (exit 1) when any floor is violated:
+
+* ``--path-floor PREFIX=PCT`` (repeatable) — the aggregate line
+  coverage of every measured file under ``PREFIX`` must be >= PCT.
+  A prefix that matches no measured files is itself a failure: a
+  silently-unmeasured package would otherwise pass its floor forever.
+* ``--total-floor PCT`` — the repo-wide line coverage must be >= PCT
+  (the non-regressing baseline; raise it as coverage grows, never
+  lower it to make a PR pass).
+
+Path prefixes are compared with a leading ``src/`` stripped from both
+sides, so ``src/repro/estimator`` and ``repro/estimator`` name the
+same package regardless of how the report recorded paths.
+
+Pure stdlib (no coverage.py import): CI installs pytest-cov, but this
+gate must also be runnable/testable where it is not.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _norm(path: str) -> str:
+    p = path.replace("\\", "/").lstrip("./")
+    if p.startswith("src/"):
+        p = p[len("src/"):]
+    return p
+
+
+def _under(path: str, prefix: str) -> bool:
+    p, pre = _norm(path), _norm(prefix).rstrip("/")
+    return p == pre or p.startswith(pre + "/")
+
+
+def _pct(covered: int, statements: int) -> float:
+    if statements <= 0:
+        return 100.0
+    return 100.0 * covered / statements
+
+
+def check(report: dict, path_floors: list, total_floor: float | None):
+    """Returns a list of human-readable failure strings (empty = pass)."""
+    files = report.get("files", {})
+    failures = []
+    for prefix, floor in path_floors:
+        covered = statements = n = 0
+        for fname, data in files.items():
+            if not _under(fname, prefix):
+                continue
+            summary = data.get("summary", {})
+            covered += int(summary.get("covered_lines", 0))
+            statements += int(summary.get("num_statements", 0))
+            n += 1
+        if n == 0:
+            failures.append(
+                f"{prefix}: no measured files match this prefix"
+            )
+            continue
+        pct = _pct(covered, statements)
+        if pct < floor:
+            failures.append(
+                f"{prefix}: {pct:.1f}% < floor {floor:.1f}% "
+                f"({covered}/{statements} lines over {n} files)"
+            )
+    if total_floor is not None:
+        totals = report.get("totals", {})
+        pct = float(
+            totals.get(
+                "percent_covered",
+                _pct(
+                    int(totals.get("covered_lines", 0)),
+                    int(totals.get("num_statements", 0)),
+                ),
+            )
+        )
+        if pct < total_floor:
+            failures.append(
+                f"TOTAL: {pct:.1f}% < floor {total_floor:.1f}%"
+            )
+    return failures
+
+
+def _parse_floor(spec: str):
+    prefix, sep, pct = spec.rpartition("=")
+    if not sep or not prefix:
+        raise argparse.ArgumentTypeError(
+            f"expected PREFIX=PCT, got {spec!r}"
+        )
+    return prefix, float(pct)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", type=Path, default=Path("coverage.json"),
+                    help="coverage JSON report (default: coverage.json)")
+    ap.add_argument("--path-floor", type=_parse_floor, action="append",
+                    default=[], metavar="PREFIX=PCT",
+                    help="per-package floor; repeatable")
+    ap.add_argument("--total-floor", type=float, default=None,
+                    metavar="PCT", help="repo-wide floor")
+    args = ap.parse_args(argv)
+    try:
+        report = json.loads(args.file.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"coverage gate: cannot read {args.file}: {e}")
+        return 1
+    failures = check(report, args.path_floor, args.total_floor)
+    for f in failures:
+        print(f"coverage gate FAIL: {f}")
+    if not failures:
+        print("coverage gate: all floors met")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

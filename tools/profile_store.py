@@ -5,6 +5,7 @@
     python tools/profile_store.py gc      [--root DIR] [--max-age-days D]
                                           [--dry-run | --yes]
     python tools/profile_store.py export  [--root DIR] [--out FILE]
+    python tools/profile_store.py fit     [--root DIR] [--out FILE]
 
 ``inspect`` lists every artifact with its key (fingerprint, model,
 registry hash), schema, age, size and — for mappings — whether the
@@ -17,6 +18,11 @@ entries apart at a glance.  ``gc`` removes artifacts from
 older store schemas plus, with ``--max-age-days``, anything older than
 that; it previews by default and deletes only with ``--yes``.
 ``export`` writes the whole store as one self-contained JSON bundle.
+``fit`` trains the learned latency predictor
+(``repro.estimator.LatencyPredictor``) on the training rows the store
+has accumulated from real profile runs, prints its per-group coverage,
+and optionally writes the fitted predictor as JSON for later
+``from_json`` loading.
 
 The store layout and keying are documented in
 ``src/repro/store/profile_store.py`` / docs/ARCHITECTURE.md §9.
@@ -78,6 +84,8 @@ def _fused_note(e) -> str:
         if spans:
             return f"segspans={len(spans)}"
         return "segspans=0"
+    if e.kind == "training_rows":
+        return f"rows={key.get('n_rows', '?')}"
     return ""
 
 
@@ -128,6 +136,24 @@ def cmd_export(args) -> int:
     return 0
 
 
+def cmd_fit(args) -> int:
+    store = _store(args.root)
+    rows = store.load_training_rows()
+    if not rows:
+        print(f"no training rows under {args.root}; profile something "
+              "first (ProfileStore.get_or_profile records rows)")
+        return 1
+    pred = store.predictor()
+    print(f"fitted on {pred.n_rows} rows "
+          f"({len(rows) - pred.n_rows} dropped as non-positive)")
+    for key, count in sorted(pred.coverage().items()):
+        print(f"  {key:28s} {count:>6d} rows")
+    if args.out is not None:
+        args.out.write_text(pred.to_json() + "\n")
+        print(f"wrote {args.out}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -151,9 +177,13 @@ def main(argv=None) -> int:
     ex = add("export", "bundle the store as one JSON")
     ex.add_argument("--out", type=Path, default=None,
                     help="output file (default: stdout)")
+    fit = add("fit", "train the latency predictor on stored rows")
+    fit.add_argument("--out", type=Path, default=None,
+                     help="write the fitted predictor JSON here")
     args = ap.parse_args(argv)
     return {
         "inspect": cmd_inspect, "gc": cmd_gc, "export": cmd_export,
+        "fit": cmd_fit,
     }[args.cmd](args)
 
 
