@@ -1,7 +1,8 @@
 """CI bench-smoke: tiny-size benchmark run + regression gate.
 
 Runs ``kernel_bench``, ``segment_bench``, ``serve_bench``,
-``adapt_bench`` and ``fleet_bench`` at CI-sized settings (model ``scale=0.25``, batches
+``adapt_bench``, ``fleet_bench`` and ``cluster_bench`` at CI-sized
+settings (model ``scale=0.25``, batches
 ``(1, 4)``, one timing repeat), writes the results as JSON (the
 ``BENCH_pr.json`` artifact the CI job uploads), and — with
 ``--check`` — fails when any metric regressed by more than the
@@ -13,7 +14,10 @@ within its batch budget, recovered steady state beating the frozen
 mapping, all outputs bit-exact) and ``fleet_bench`` asserts the joint
 mapping's never-worse-than-all-GPU guarantee plus a measured two-model
 co-run makespan win, bit-exact per tenant — so a broken loop fails the
-job outright, before any timing comparison.  ``segment_bench`` asserts
+job outright, before any timing comparison.  ``cluster_bench`` asserts
+multi-host throughput scaling (>= 1.7x at 2 hosts, >= 3x at 4),
+cross-host noisy-tenant isolation, and a journaled elastic scale-up
+under surge.  ``segment_bench`` asserts
 every applicable fused segment-scope variant bit-exact against the
 per-layer launch.  Their ``us=0`` sentinel rows are coverage-gated
 (missing from a PR run fails) but not timing-gated.
@@ -85,14 +89,21 @@ SMOKE_KWARGS = {
         "repeats": 1,
         "profile_repeats": 1,
     },
+    "cluster_bench": {
+        "scale": 0.25,
+        "batch": 4,
+        "rounds": 4,
+        "repeats": 1,
+        "profile_repeats": 1,
+    },
 }
 
 
 def collect() -> dict:
     """{metric_name: {"us": float, "derived": str}} over the suites."""
     from benchmarks import (
-        adapt_bench, fleet_bench, kernel_bench, segment_bench,
-        serve_bench,
+        adapt_bench, cluster_bench, fleet_bench, kernel_bench,
+        segment_bench, serve_bench,
     )
 
     metrics: dict = {}
@@ -102,6 +113,7 @@ def collect() -> dict:
         ("serve_bench", serve_bench.run),
         ("adapt_bench", adapt_bench.run),
         ("fleet_bench", fleet_bench.run),
+        ("cluster_bench", cluster_bench.run),
     ):
         for rname, us, derived in fn(**SMOKE_KWARGS[name]):
             metrics[rname] = {"us": round(float(us), 3), "derived": derived}

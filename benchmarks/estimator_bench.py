@@ -36,7 +36,7 @@ import jax
 
 from repro.bnn import build_model
 from repro.bnn.models import pack_params
-from repro.core.mapper import configuration_from_mapping, map_efficient_configuration
+from repro.core.mapper import map_efficient_configuration, price_mapping
 from repro.core.parallel_config import CPU, FULL_GPU
 from repro.core.profiler import profile_bnn_model
 from repro.estimator import InterferenceFit
@@ -137,7 +137,7 @@ def run(
         truth = map_efficient_configuration(
             truth_table, batch_sizes=(batch,), policy="dp"
         )
-        repriced = configuration_from_mapping(
+        repriced = price_mapping(
             truth_table, batch, seeded.layer_configs
         )
         ratio = (
@@ -149,7 +149,7 @@ def run(
             f"fully-profiled DP (bound {max_ratio}x)"
         )
         uniform = {
-            name: configuration_from_mapping(
+            name: price_mapping(
                 truth_table, batch, (cfg,) * len(target.specs)
             ).expected_time_per_example
             for name, cfg in (("cpu", CPU), ("gpu", FULL_GPU))

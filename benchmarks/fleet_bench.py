@@ -9,7 +9,7 @@ device are jointly slower than splitting across processors.  Two fleet
 assignments are compared **on the same profile tables**:
 
 * **all-GPU** — each tenant's best all-device mapping
-  (``all_device_configuration``): what two independent HEP-BNN
+  (``map_all_device``): what two independent HEP-BNN
   deployments would co-locate;
 * **joint** — ``map_fleet``'s coordinate-descent assignment under the
   contention-inflation model (provably <= all-GPU under that model —
@@ -64,7 +64,7 @@ from repro.estimator import InterferenceFit
 from repro.fleet import (
     DeviceTimeLedger,
     FleetRouter,
-    all_device_configuration,
+    map_all_device,
     joint_makespan,
     map_fleet,
 )
@@ -169,7 +169,7 @@ def run(
 
     # the two fleet assignments, priced on the same tables
     all_gpu = {
-        name: all_device_configuration(t, batch_sizes=(batch,))
+        name: map_all_device(t, batch_sizes=(batch,))
         for name, t in zip(names, tables)
     }
     plan = map_fleet(

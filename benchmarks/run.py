@@ -22,6 +22,10 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
   fleet_bench        -> beyond-paper: two-model co-serving
                         (repro.fleet) — joint contention-aware mapping
                         vs both-solo-all-GPU, measured co-run makespan
+  cluster_bench      -> beyond-paper: multi-host cluster tier
+                        (repro.cluster) — aggregate throughput vs host
+                        count, noisy-tenant isolation, journaled
+                        elastic scale-up
   estimator_bench    -> beyond-paper: learned latency estimator
                         (repro.estimator) — predictor-seeded DP on an
                         unprofiled model (zero profiling passes) vs
@@ -29,7 +33,7 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                         interference-law recovery
 
 The CI regression gate over the tiny-size variants of kernel_bench,
-serve_bench, adapt_bench and fleet_bench lives in
+serve_bench, adapt_bench, fleet_bench and cluster_bench lives in
 ``benchmarks/bench_smoke.py``.
 """
 
@@ -41,9 +45,9 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        adapt_bench, batch_sweep, efficient_configs, estimator_bench,
-        fleet_bench, kernel_bench, profile_layers, roofline,
-        segment_bench, serve_bench,
+        adapt_bench, batch_sweep, cluster_bench, efficient_configs,
+        estimator_bench, fleet_bench, kernel_bench, profile_layers,
+        roofline, segment_bench, serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -72,6 +76,8 @@ def main() -> None:
          SMOKE_KWARGS["adapt_bench"] if quick else {}),
         ("fleet_bench", fleet_bench.run,
          SMOKE_KWARGS["fleet_bench"] if quick else {}),
+        ("cluster_bench", cluster_bench.run,
+         SMOKE_KWARGS["cluster_bench"] if quick else {}),
         # not in bench_smoke: the gates inside the suite are the gate
         ("estimator_bench", estimator_bench.run,
          {"train_scales": (0.25, 0.375), "target_scale": 0.5}

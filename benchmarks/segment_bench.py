@@ -47,7 +47,7 @@ import numpy as np
 from repro.bnn import build_model
 from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
 from repro.core.mapped_model import _layer_fns
-from repro.core.mapper import configuration_from_mapping
+from repro.core.mapper import price_mapping
 from repro.core.parallel_config import CPU, FULL_GPU
 from repro.core.plan import build_plan, device_spans
 from repro.core.profiler import profile_bnn_model
@@ -93,7 +93,7 @@ def run(
     best_speedup = 0.0
     variants_seen: set = set()
     for b in batch_sizes:
-        ec = configuration_from_mapping(table, b, mapping)
+        ec = price_mapping(table, b, mapping)
         plan = build_plan(ec, mode="segments")
         (start, stop) = device_spans(ec)[0]
         assert (start, stop) == (1, len(m.specs)), "expected one segment"

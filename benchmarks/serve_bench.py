@@ -14,7 +14,7 @@ asserted bit-exact between the two paths.
 The mapping is the DP's if it is genuinely mixed (contains both host
 and device segments); otherwise the canonical mixed split — GEMM
 layers (conv/fc) on the device, elementwise layers on the host — is
-forced via ``configuration_from_mapping`` so the pipeline always has
+forced via ``price_mapping`` so the pipeline always has
 two stages to overlap.
 """
 
@@ -28,8 +28,8 @@ import numpy as np
 from repro.bnn import build_model
 from repro.bnn.models import pack_params, prepare_input_packed
 from repro.core.mapper import (
-    configuration_from_mapping,
     map_efficient_configuration,
+    price_mapping,
     segments_of,
 )
 from repro.core.profiler import profile_bnn_model
@@ -69,7 +69,7 @@ def run(
 
     rows = []
     for b in batch_sizes:
-        ec = configuration_from_mapping(table, b, mapping)
+        ec = price_mapping(table, b, mapping)
         pipe = SegmentPipeline(m, packed, ec)
         inputs = [
             prepare_input_packed(

@@ -13,14 +13,14 @@ import argparse
 import jax
 import numpy as np
 
+from repro import api
 from repro.bnn import build_model
 from repro.bnn.models import (
     forward_packed, pack_params, prepare_input_packed,
 )
 from repro.bnn.train import eval_step, init_train_state, train_step
-from repro.core import build_mapped_model, map_efficient_configuration
+from repro.core import build_mapped_model
 from repro.core.mapper import best_uniform
-from repro.core.profiler import profile_bnn_model
 from repro.data import ShardedBatcher, make_image_dataset
 from repro.serving import ServingEngine
 
@@ -53,11 +53,11 @@ def main():
     # 3. HEP-BNN: profile every layer under all 8 implementations,
     #    then map with both policies — the paper's greedy Algorithm 1
     #    and the transfer-aware DP that prices the fused executor
-    table = profile_bnn_model(
+    table = api.profile_model(
         model, packed, batch_sizes=batch_sizes, repeats=repeats
     )
-    ec_greedy = map_efficient_configuration(table, policy="greedy")
-    ec = map_efficient_configuration(table, policy="dp")
+    ec_greedy = api.map_model(table, policy="greedy")
+    ec = api.map_model(table, policy="dp")
     print(f"proper batch size: {ec.proper_batch_size}")
     for label, c, k, b in zip(
         ec.layer_labels, ec.layer_configs,

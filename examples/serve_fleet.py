@@ -1,15 +1,16 @@
-"""Co-serve two BNN models on one platform with a contention-aware
-joint mapping, an SLO router, and a device-time ledger.
+"""Co-serve two BNN models on one platform through the ``repro.api``
+facade: contention-aware joint mapping, SLO router, device-time
+ledger — one ``Deployment`` object end to end.
 
-The full fleet loop (docs/ARCHITECTURE.md §10):
+The full fleet loop (docs/ARCHITECTURE.md §10, via §13's facade):
 
-1. profile both models over the near-tied CPU/XYZ placement pair;
-2. ``map_fleet`` — joint coordinate-descent mapping under the
-   contention-inflation model (never worse than both-solo-all-GPU);
-3. persist the joint mappings in a **fleet-scoped** ``ProfileStore``
-   key (a mapping optimized against these co-runners must not
-   warm-start a solo deployment, or another fleet);
-4. serve interleaved traffic through a ``FleetRouter``: per-tenant
+1. ``Deployment.plan`` profiles both models over the near-tied
+   CPU/XYZ placement pair and jointly maps them under the
+   contention-inflation model (never worse than both-solo-all-GPU),
+   persisting the joint mappings in a **fleet-scoped**
+   ``ProfileStore`` key (a mapping optimized against these co-runners
+   must not warm-start a solo deployment, or another fleet);
+2. ``serve(adapt=True)`` stands up the ``FleetRouter``: per-tenant
    priorities and deadlines, admission control shedding requests that
    would miss their SLO, a shared ``DeviceTimeLedger`` metering who
    occupied what, and one tenant-named ``RemapController`` per engine
@@ -28,15 +29,12 @@ import tempfile
 import jax
 import numpy as np
 
-from repro.adapt import RemapController, SegmentTelemetry
+from repro import api
 from repro.bnn import build_model
 from repro.bnn.models import (
     forward_packed, pack_params, prepare_input_packed,
 )
 from repro.core.parallel_config import CPU, FULL_GPU
-from repro.core.profiler import profile_bnn_model
-from repro.fleet import DeviceTimeLedger, FleetRouter, map_fleet
-from repro.serving import ServingEngine
 from repro.store import ProfileStore, fleet_scope
 
 SPACE = (CPU, FULL_GPU)
@@ -55,22 +53,24 @@ def main():
         args.scale, args.requests = 0.25, 32
 
     names = ("narrow", "wide")
-    tenants = {}
-    tables = []
+    models = {}
     for name, s in zip(names, (args.scale, args.scale * 1.5)):
         m = build_model("fashion_mnist", scale=s)
         packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
-        table = profile_bnn_model(
-            m, packed, batch_sizes=(args.batch,), configs=SPACE,
-            repeats=1,
-        )
-        tenants[name] = (m, packed, table)
-        tables.append(table)
+        models[name] = (m, packed)
 
-    plan = map_fleet(
-        tables, names=names, configs=SPACE,
-        batch_sizes=(args.batch,), gamma=2.0,
+    # fleet-scoped persistence: these mappings key under this exact
+    # co-tenancy — a solo warm start can never pick them up
+    store = ProfileStore(
+        tempfile.mkdtemp(prefix="fleet_store_"),
+        scope=fleet_scope(names),
     )
+    dep = api.Deployment.plan(
+        models, store=store, configs=SPACE,
+        batch_sizes=(args.batch,), gamma=2.0, repeats=1,
+        priorities={"narrow": 1},
+    )
+    plan = dep.fleet_plan
     print(
         f"joint plan: makespan {plan.joint_makespan_s * 1e6:.0f}us "
         f"vs all-GPU {plan.baseline_makespan_s * 1e6:.0f}us "
@@ -85,48 +85,22 @@ def main():
             + f" infl(host={t.host_inflation:.2f}, "
             f"dev={t.device_inflation:.2f})"
         )
-
-    # fleet-scoped persistence: these mappings key under this exact
-    # co-tenancy — a solo warm start can never pick them up
-    store = ProfileStore(
-        tempfile.mkdtemp(prefix="fleet_store_"),
-        scope=fleet_scope(names),
-    )
-    for name, t in zip(names, plan.tenants):
-        store.save_mapping(t.config)
     print(f"persisted joint mappings under scope {store.scope}")
 
-    ledger = DeviceTimeLedger()
-    router = FleetRouter(ledger=ledger)
-    step_s = {
-        name: t.config.expected_time_per_example
-        * t.config.proper_batch_size
-        for name, t in zip(names, plan.tenants)
-    }
-    for name, t in zip(names, plan.tenants):
-        m, packed, table = tenants[name]
-        telemetry = SegmentTelemetry(sample_every=2, tenant=name)
-        engine = ServingEngine(
-            m, packed, t.config,
-            allowed_batch_sizes=table.batch_sizes,
-            telemetry=telemetry,
-            observer=ledger.observer(name),
-        )
-        controller = RemapController(engine, table, store=store)
-        router.add_tenant(
-            name, engine,
-            # the narrow tenant is latency-critical: higher priority,
-            # a deadline tight enough that backlog bursts get shed
-            priority=1 if name == "narrow" else 0,
-            deadline_s=(4.0 * step_s[name] if name == "narrow"
-                        else float("inf")),
-            controller=controller,
-        )
+    # the narrow tenant is latency-critical: higher priority (set at
+    # plan time), a deadline tight enough that backlog bursts get shed
+    narrow = dep.tenants["narrow"].config
+    narrow_step_s = (
+        narrow.expected_time_per_example * narrow.proper_batch_size
+    )
+    dep.tenants["narrow"].deadline_s = 4.0 * narrow_step_s
+
+    dep.serve(adapt=True, telemetry_sample_every=2)
 
     n = args.requests
     xs, refs, reqs = {}, {}, {name: [] for name in names}
     for name in names:
-        m, packed, _ = tenants[name]
+        m, packed = models[name]
         x01 = jax.random.uniform(
             jax.random.PRNGKey(7), (n, *m.input_hw, m.in_channels)
         )
@@ -141,12 +115,14 @@ def main():
             for _ in range(per_round):
                 if i[name] < n:
                     reqs[name].append(
-                        (i[name], router.submit(name, xs[name][i[name]]))
+                        (i[name], dep.submit(xs[name][i[name]],
+                                             tenant=name))
                     )
                     i[name] += 1
-        router.step(force=False)
-    router.drain()
+        dep.step()
+    dep.drain()
 
+    stats = dep.stats()
     for name in names:
         lat_us, shed = [], 0
         for j, r in reqs[name]:
@@ -158,14 +134,14 @@ def main():
                 f"{name} response {j} mismatch"
             )
             lat_us.append(r.latency_s * 1e6)
-        s = router.stats()[name]
-        u = ledger.usage(name)
+        s = stats["tenants"][name]
+        u = stats["ledger"][name]
         print(
             f"{name}: served {s['served']} shed {shed} "
             f"p50 {np.percentile(lat_us, 50):.0f}us "
             f"p99 {np.percentile(lat_us, 99):.0f}us  "
-            f"ledger host {u.host_s * 1e3:.1f}ms / "
-            f"device {u.device_s * 1e3:.1f}ms"
+            f"ledger host {u['host_s'] * 1e3:.1f}ms / "
+            f"device {u['device_s'] * 1e3:.1f}ms"
         )
         assert s["rejected"] == shed
     print("all served responses verified exact vs per-model references")

@@ -1,13 +1,13 @@
 """Batched-request serving through the HEP-mapped BNN, via the
-segment-pipelined serving runtime (``repro.serving``).
+``repro.api`` facade — the blessed profile → map → serve path.
 
-Profiles the model, maps it with the transfer-aware DP, then stands up
-a :class:`ServingEngine`: single-example requests are coalesced by the
-dynamic micro-batcher (max-batch = the mapper's proper batch size,
-partial batches padded to a profiled batch size) and executed as a
-two-stage host/device segment pipeline.  Reports p50/p99 request
-latency and verifies every response bit-exact against the reference
-model.
+``Deployment.plan`` profiles the model and maps it with the
+transfer-aware DP; ``serve()`` stands up the segment-pipelined
+engine: single-example requests are coalesced by the dynamic
+micro-batcher (max-batch = the mapper's proper batch size, partial
+batches padded to a profiled batch size) and executed as a two-stage
+host/device segment pipeline.  Reports p50/p99 request latency and
+verifies every response bit-exact against the reference model.
 
     PYTHONPATH=src python examples/serve_mapped.py
     PYTHONPATH=src python examples/serve_mapped.py \
@@ -20,14 +20,12 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import api
 from repro.bnn import build_model
 from repro.bnn.models import (
     forward_packed, pack_params, prepare_input_packed,
 )
-from repro.core import map_efficient_configuration
-from repro.core.profiler import profile_bnn_model
 from repro.data import make_image_dataset
-from repro.serving import ServingEngine
 
 
 def main():
@@ -41,10 +39,14 @@ def main():
     model = build_model("fashion_mnist", scale=args.scale)
     packed = pack_params(model.specs, model.init(jax.random.PRNGKey(0)))
 
-    table = profile_bnn_model(model, packed, batch_sizes=(1, 4, 16),
-                              repeats=2)
-    ec = map_efficient_configuration(table, policy=args.policy)
-    artifact = Path("results") / "efficient_config_fmnist.json"
+    dep = api.Deployment.plan(
+        (model, packed),
+        batch_sizes=(1, 4, 16), policy=args.policy, repeats=2,
+    )
+    ec = dep.configuration()
+    # own filename: results/efficient_config_fmnist.json is the
+    # committed legacy-schema fixture tests round-trip — never clobber
+    artifact = Path("results") / "serve_mapped_config.json"
     artifact.parent.mkdir(exist_ok=True)
     artifact.write_text(ec.to_json())
     print(f"wrote mapping artifact -> {artifact}")
@@ -55,24 +57,20 @@ def main():
         + f", proper batch {ec.proper_batch_size}"
     )
 
-    engine = ServingEngine(
-        model, packed, ec,
-        max_wait_s=args.max_wait_ms * 1e-3,
-        allowed_batch_sizes=table.batch_sizes,
-    )
+    dep.serve(max_wait_s=args.max_wait_ms * 1e-3)
 
     n = args.requests
     ds = make_image_dataset(7, n, model.input_hw, model.in_channels)
     xw_all = np.asarray(prepare_input_packed(ds.x))
     # trickle requests in, stepping as we go: full micro-batches drain
     # immediately, stragglers age out under --max-wait-ms, and a final
-    # forced step flushes the partial tail
+    # forced drain flushes the partial tail
     reqs = []
     served = 0
     for i in range(n):
-        reqs.append(engine.submit(xw_all[i]))
-        served += engine.step()
-    served += engine.step(force=True)
+        reqs.append(dep.submit(xw_all[i]))
+        served += dep.step()
+    served += dep.drain()
     assert served == n
 
     ref = np.asarray(forward_packed(model.specs, packed, xw_all))
@@ -84,8 +82,10 @@ def main():
         lat_us.append(r.latency_s * 1e6)
         correct += int(np.argmax(scores) == ds.y[i])
     lat_us = np.asarray(lat_us)
+    stats = dep.stats()
     print(
-        f"served {n} requests @ max_batch {engine.batcher.max_batch}: "
+        f"served {stats['served']} requests @ max_batch "
+        f"{ec.proper_batch_size}: "
         f"p50 {np.percentile(lat_us, 50):.0f}us  "
         f"p99 {np.percentile(lat_us, 99):.0f}us  "
         f"(untrained acc {correct / n:.3f})"

@@ -43,8 +43,8 @@ import time
 
 from repro.core.mapper import (
     EfficientConfiguration,
-    configuration_from_mapping,
     map_efficient_configuration,
+    price_mapping,
 )
 from repro.core.parallel_config import is_host_config
 from repro.core.profiler import ProfileTable
@@ -211,7 +211,7 @@ class RemapController:
             configs=self.configs,
             batch_sizes=(batch,),
         )
-        old_on_corrected = configuration_from_mapping(
+        old_on_corrected = price_mapping(
             corrected, batch, old.layer_configs
         )
         record = SwapRecord(

@@ -1,0 +1,33 @@
+"""Multi-host cluster serving tier (docs/ARCHITECTURE.md §13).
+
+Scales the single-host co-serving stack (``repro.fleet``) out to a
+pool of simulated hosts: contention-priced tenant placement
+(:mod:`~repro.cluster.placement`), per-host routers and ledgers
+(:mod:`~repro.cluster.host`), pluggable request dispatch
+(:mod:`~repro.cluster.dispatch`), and an elastic pool controller with
+a journaled decision trail (:mod:`~repro.cluster.elastic`).
+
+Most consumers should reach this through ``repro.api.Deployment.plan(
+models, hosts=N)`` rather than constructing a :class:`Cluster`
+directly.
+"""
+
+from repro.cluster.cluster import Cluster
+from repro.cluster.dispatch import (
+    ConsistentHash,
+    LeastLoaded,
+    make_policy,
+)
+from repro.cluster.elastic import ElasticController, ScaleRecord, remesh_state
+from repro.cluster.host import (
+    ACTIVE,
+    DRAINING,
+    RETIRED,
+    ServingHost,
+    latency_quantile,
+)
+from repro.cluster.placement import (
+    ClusterPlan,
+    HostAssignment,
+    place_tenants,
+)

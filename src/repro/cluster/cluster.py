@@ -1,0 +1,224 @@
+"""The cluster orchestrator: placement, dispatch, serving, scaling.
+
+:class:`Cluster` is what ``repro.api.Deployment`` stands up for
+``hosts > 1``.  It owns the pool of :class:`~repro.cluster.host.
+ServingHost`\\ s, places tenants with :func:`~repro.cluster.placement.
+place_tenants`, routes requests through a pluggable dispatch policy,
+and (optionally) lets an :class:`~repro.cluster.elastic.
+ElasticController` grow and shrink the pool.
+
+Re-planning invariant: every engine in the cluster serves the same
+proper batch size (placement maps with one ``batch_sizes`` entry), so
+topology changes that re-map a host's residents can apply with the
+engine's batch-boundary **hot swap** — a scale event never rebuilds a
+live engine, and every in-flight request completes under exactly one
+configuration.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+from repro.cluster.dispatch import make_policy
+from repro.cluster.elastic import ElasticController
+from repro.cluster.host import ACTIVE, RETIRED, ServingHost
+from repro.cluster.placement import place_tenants
+from repro.fleet.scheduler import map_fleet
+
+
+class Cluster:
+    def __init__(
+        self,
+        tenant_plans: Sequence,
+        *,
+        n_hosts: int = 2,
+        gamma: float = 1.0,
+        law=None,
+        policy=None,
+        mapping_policy: str = "dp",
+        configs: Sequence[str] | None = None,
+        batch_sizes: Sequence[int] | None = None,
+        registry=None,
+        engine_factory=None,
+        elastic=None,
+        clock=time.monotonic,
+        occupancy_window: int = 16,
+        engine_kwargs: dict | None = None,
+    ):
+        """`tenant_plans` are ``repro.api.TenantPlan``-like bundles
+        (model, packed params, profile table, solo configuration).
+        `elastic` is ``None`` (fixed pool), an
+        :class:`ElasticController`, or a dict of its knobs."""
+        self.tenants = {tp.name: tp for tp in tenant_plans}
+        if len(self.tenants) != len(tenant_plans):
+            raise ValueError("tenant names must be unique")
+        self._gamma = gamma
+        self._law = law
+        self._mapping_policy = mapping_policy
+        self._configs = configs
+        self._batch_sizes = (
+            tuple(batch_sizes) if batch_sizes is not None else None
+        )
+        self._registry = registry
+        self._engine_factory = engine_factory
+        self._clock = clock
+        self._occupancy_window = occupancy_window
+        self._engine_kwargs = dict(engine_kwargs or {})
+        self.policy = make_policy(policy if policy is not None
+                                  else "least_loaded")
+        if isinstance(elastic, dict):
+            elastic = ElasticController(clock=clock, **elastic)
+        self.elastic = elastic
+
+        self.plan = place_tenants(
+            tenant_plans, n_hosts, gamma=gamma, law=law,
+            policy=mapping_policy, configs=configs,
+            batch_sizes=self._batch_sizes, registry=registry,
+        )
+        self.hosts: list = []
+        for a in self.plan.assignments:
+            host = self._new_host()
+            for name in a.tenant_names:
+                host.add_tenant(
+                    self.tenants[name], self.plan.config_of(name)
+                )
+
+    # -- pool plumbing -----------------------------------------------
+    def _new_host(self) -> ServingHost:
+        host = ServingHost(
+            len(self.hosts),
+            engine_factory=self._engine_factory,
+            clock=self._clock,
+            occupancy_window=self._occupancy_window,
+            engine_kwargs=self._engine_kwargs,
+        )
+        self.hosts.append(host)
+        return host
+
+    def active_hosts(self) -> list:
+        return [h for h in self.hosts if h.status == ACTIVE]
+
+    def _hosts_for(self, tenant: str) -> list:
+        return [
+            h for h in self.hosts
+            if h.accepting and h.hosts_tenant(tenant)
+        ]
+
+    def _replicate(self, tp, host: ServingHost) -> None:
+        """Add tenant `tp` to `host`, re-mapping the host's resident
+        set jointly so existing residents' configurations account for
+        their new co-runner.  Residents whose mapping changed are
+        batch-boundary hot-swapped (same serving batch size by the
+        cluster invariant), never rebuilt."""
+        group = [self.tenants[n] for n in host.tenant_names()] + [tp]
+        plan = map_fleet(
+            [t.table for t in group],
+            names=[t.name for t in group],
+            policy=self._mapping_policy, configs=self._configs,
+            batch_sizes=self._batch_sizes,
+            weights=[t.weight for t in group],
+            gamma=self._gamma, law=self._law, registry=self._registry,
+        )
+        by_name = {t.name: t.config for t in plan.tenants}
+        for name in host.tenant_names():
+            engine = host.router.tenant(name).engine
+            new = by_name[name]
+            if new.layer_configs != engine.config.layer_configs:
+                engine.swap_configuration(new)
+        host.add_tenant(tp, by_name[tp.name])
+
+    # -- scaling hooks (called by ElasticController) -------------------
+    def scale_up(self) -> tuple:
+        """Add a host and replicate the hottest host's residents onto
+        it, splitting that host's load.  Returns (host, moved)."""
+        donors = self.active_hosts()
+        hottest = max(
+            donors, key=lambda h: (h.occupancy(), h.pending())
+        )
+        host = self._new_host()
+        moved = []
+        for name in hottest.tenant_names():
+            self._replicate(self.tenants[name], host)
+            moved.append(name)
+        if not moved:
+            # hottest host was empty (degenerate pool) — replicate
+            # every tenant so the new host is immediately useful
+            for name, tp in self.tenants.items():
+                self._replicate(tp, host)
+                moved.append(name)
+        return host, tuple(moved)
+
+    def start_drain(self, host: ServingHost) -> tuple:
+        """Begin draining `host`.  Tenants whose only accepting
+        replica lives there are first replicated onto the least-loaded
+        remaining host, so no tenant loses service while the drain
+        completes.  Returns the moved tenant names."""
+        moved = []
+        remaining = [h for h in self.active_hosts() if h is not host]
+        if not remaining:
+            raise RuntimeError("cannot drain the last active host")
+        host.start_drain()
+        for name in host.tenant_names():
+            if not self._hosts_for(name):
+                target = min(
+                    remaining, key=lambda h: (h.pending(), h.host_id)
+                )
+                self._replicate(self.tenants[name], target)
+                moved.append(name)
+        return tuple(moved)
+
+    def on_retired(self, host: ServingHost) -> None:
+        """Post-retire hook (journaled by the controller)."""
+
+    # -- serving -----------------------------------------------------
+    def submit(self, tenant: str, x, *, key=None):
+        """Route one request to a replica of `tenant` (dispatch
+        policy picks among accepting hosts)."""
+        if tenant not in self.tenants:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        host = self.policy.choose(self._hosts_for(tenant), tenant, key)
+        return host.submit(tenant, x)
+
+    def step(self, *, force: bool = False) -> dict:
+        """One cluster tick: every non-retired host takes a dispatch
+        round, then the elastic controller (when attached) takes a
+        control tick.  Returns {tenant: served} aggregated."""
+        served: dict = {}
+        for h in self.hosts:
+            if h.status == RETIRED:
+                continue
+            for name, n in h.step(force=force).items():
+                served[name] = served.get(name, 0) + n
+        if self.elastic is not None:
+            self.elastic.observe(self)
+        return served
+
+    def drain(self, *, max_steps: int = 1000) -> dict:
+        """Force-serve until every host's queues are empty."""
+        total: dict = {}
+        for h in self.hosts:
+            if h.status == RETIRED:
+                continue
+            for name, n in h.drain(max_steps=max_steps).items():
+                total[name] = total.get(name, 0) + n
+        return total
+
+    def pending(self) -> int:
+        return sum(
+            h.pending() for h in self.hosts if h.status != RETIRED
+        )
+
+    def stats(self) -> dict:
+        out = {
+            "mode": "cluster",
+            "n_hosts": len(self.hosts),
+            "n_active": len(self.active_hosts()),
+            "plan": self.plan.to_dict(),
+            "hosts": [h.stats() for h in self.hosts],
+        }
+        if self.elastic is not None:
+            out["elastic"] = [
+                r.to_dict() for r in self.elastic.journal
+            ]
+        return out

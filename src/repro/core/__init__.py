@@ -35,6 +35,7 @@ from repro.core.mapper import (
     Segment,
     configuration_from_mapping,
     map_efficient_configuration,
+    price_mapping,
     segments_of,
     uniform_total,
 )

@@ -496,7 +496,7 @@ def map_efficient_configuration(
     )
 
 
-def configuration_from_mapping(
+def price_mapping(
     table: ProfileTable,
     batch: int,
     mapping: Sequence[str],
@@ -510,6 +510,9 @@ def configuration_from_mapping(
     ``policy="dp"`` semantics: boundary cost only at placement
     changes, so ``segments()`` / the serving pipeline execute exactly
     what was priced.
+
+    Canonical spelling of the legacy ``configuration_from_mapping``
+    (part of the ``repro.api`` verb set).
     """
     if batch not in table.batch_sizes:
         raise ValueError(
@@ -535,6 +538,21 @@ def configuration_from_mapping(
         per_layer_kernel_times=kernels,
         per_layer_boundary_times=boundaries,
     )
+
+
+def configuration_from_mapping(
+    table: ProfileTable,
+    batch: int,
+    mapping: Sequence[str],
+) -> EfficientConfiguration:
+    """Deprecated spelling of :func:`repro.api.price_mapping` — kept
+    importable; warns once per call site and delegates."""
+    from repro._compat import warn_deprecated
+
+    warn_deprecated("configuration_from_mapping", "price_mapping")
+    from repro import api
+
+    return api.price_mapping(table, batch, mapping)
 
 
 def uniform_total(table: ProfileTable, config: str, batch: int) -> float:

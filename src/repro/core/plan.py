@@ -497,7 +497,7 @@ def select_fused_segments(
     return dataclasses.replace(config, fused_segments=tuple(chosen))
 
 
-def fuse_configuration(
+def fuse_mapping(
     model,
     packed_params,
     table,
@@ -512,7 +512,10 @@ def fuse_configuration(
     device segments (``profiler.profile_segment_variants``) and select
     the winners — the one-call path from a mapped configuration to a
     fused one.  The table is updated in place with the segment rows,
-    so saving it persists the fused profile."""
+    so saving it persists the fused profile.
+
+    Canonical spelling of the legacy ``fuse_configuration`` (part of
+    the ``repro.api`` verb set)."""
     from repro.core.profiler import profile_segment_variants
 
     profile_segment_variants(
@@ -527,3 +530,20 @@ def fuse_configuration(
         platform=platform,
     )
     return select_fused_segments(config, table, registry=registry)
+
+
+def fuse_configuration(
+    model,
+    packed_params,
+    table,
+    config: EfficientConfiguration,
+    **kwargs,
+) -> EfficientConfiguration:
+    """Deprecated spelling of :func:`repro.api.fuse_mapping` — kept
+    importable; warns once per call site and delegates."""
+    from repro._compat import warn_deprecated
+
+    warn_deprecated("fuse_configuration", "fuse_mapping")
+    from repro import api
+
+    return api.fuse_mapping(model, packed_params, table, config, **kwargs)

@@ -28,6 +28,7 @@ from repro.fleet.scheduler import (
     all_device_configuration,
     device_configs,
     joint_makespan,
+    map_all_device,
     map_fleet,
     tenant_inflations,
 )

@@ -45,8 +45,8 @@ from typing import Sequence
 from repro.core.cost_model import contention_inflation, inflate_profile
 from repro.core.mapper import (
     EfficientConfiguration,
-    configuration_from_mapping,
     map_efficient_configuration,
+    price_mapping,
 )
 from repro.core.parallel_config import is_host_config
 from repro.core.profiler import ProfileTable
@@ -68,7 +68,7 @@ def device_configs(table: ProfileTable, registry=None) -> tuple:
     return tuple(names)
 
 
-def all_device_configuration(
+def map_all_device(
     table: ProfileTable,
     *,
     batch_sizes: Sequence[int] | None = None,
@@ -76,7 +76,10 @@ def all_device_configuration(
 ) -> EfficientConfiguration:
     """The strongest all-GPU mapping for one model: the DP restricted
     to device placements (any device variant per layer, best batch) —
-    the per-tenant piece of the all-models-all-GPU fleet baseline."""
+    the per-tenant piece of the all-models-all-GPU fleet baseline.
+
+    Canonical spelling of the legacy ``all_device_configuration``
+    (part of the ``repro.api`` verb set)."""
     return map_efficient_configuration(
         table,
         configs=device_configs(table, registry),
@@ -152,7 +155,7 @@ def _shares_of(
         if measured is not None:
             out.append(measured)
             continue
-        solo = configuration_from_mapping(
+        solo = price_mapping(
             tables[i], cfg.proper_batch_size, cfg.layer_configs
         )
         out.append(solo.placement_shares())
@@ -225,10 +228,8 @@ def _price_assignment(
             registry=registry,
         )
         batch = cfg.proper_batch_size
-        priced = configuration_from_mapping(
-            inflated, batch, cfg.layer_configs
-        )
-        solo = configuration_from_mapping(table, batch, cfg.layer_configs)
+        priced = price_mapping(inflated, batch, cfg.layer_configs)
+        solo = price_mapping(table, batch, cfg.layer_configs)
         plans.append(
             TenantPlan(
                 name=names[i] if names else table.model_name,
@@ -294,9 +295,7 @@ def map_fleet(
 
     # seed: the all-GPU fleet assignment — N solo deployments
     assignment = [
-        all_device_configuration(
-            t, batch_sizes=batch_sizes, registry=registry
-        )
+        map_all_device(t, batch_sizes=batch_sizes, registry=registry)
         for t in tables
     ]
     baseline = best = makespan(assignment)
@@ -344,4 +343,22 @@ def map_fleet(
         baseline_makespan_s=baseline,
         rounds=rounds,
         converged=converged,
+    )
+
+
+def all_device_configuration(
+    table: ProfileTable,
+    *,
+    batch_sizes: Sequence[int] | None = None,
+    registry=None,
+) -> EfficientConfiguration:
+    """Deprecated spelling of :func:`repro.api.map_all_device` — kept
+    importable; warns once per call site and delegates."""
+    from repro._compat import warn_deprecated
+
+    warn_deprecated("all_device_configuration", "map_all_device")
+    from repro import api
+
+    return api.map_all_device(
+        table, batch_sizes=batch_sizes, registry=registry
     )

@@ -49,7 +49,7 @@ def bnn_mapping_hillclimb(
     result is sandwiched: DP total <= hillclimb total <= start total
     (asserted in tests/test_adapt.py).
     """
-    from repro.core.mapper import configuration_from_mapping
+    from repro.core.mapper import price_mapping
 
     batches = table.batch_sizes if batch is None else (batch,)
     best = None                      # (total, batch, mapping, trajectory)
@@ -87,7 +87,7 @@ def bnn_mapping_hillclimb(
         if best is None or total < best[0]:
             best = (total, b, tuple(mapping), trajectory)
     total, b, mapping, trajectory = best
-    return configuration_from_mapping(table, b, mapping), trajectory
+    return price_mapping(table, b, mapping), trajectory
 
 
 def run_bnn(outdir: Path):

@@ -11,6 +11,10 @@ Procedure (the standard elastic-recovery path):
 Degraded-batch policy: keep the global batch (more per-device memory)
 or scale it with the device count (keep per-device shape, changes
 optimization) — exposed as `batch_policy`.
+
+The serving-side elastic control loop lives in
+:mod:`repro.cluster.elastic`, which re-exports :func:`remesh_state`
+as the state-migration hook for pool-size changes.
 """
 
 from __future__ import annotations

@@ -1,0 +1,290 @@
+"""The ``repro.api`` facade: canonical verb set, deprecation shims
+(bit-exact, warn once per call site), and the Deployment object
+(docs/ARCHITECTURE.md §13)."""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro._compat import reset_warned
+from repro.bnn.models import (
+    build_model, forward_packed, pack_params, prepare_input_packed,
+)
+from repro.core.parallel_config import CPU
+
+from tests.fixtures import tied_table
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_sites():
+    reset_warned()
+    yield
+    reset_warned()
+
+
+@pytest.fixture(scope="module")
+def small():
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(3)
+    x01 = rng.integers(0, 2, size=(8, 28, 28, 1)).astype(np.float32)
+    xw = np.asarray(prepare_input_packed(x01))
+    ref = np.asarray(forward_packed(m.specs, packed, xw))
+    return m, packed, xw, ref
+
+
+# ---------------------------------------------------------------------------
+# the verb set
+# ---------------------------------------------------------------------------
+
+
+def test_verb_set_is_published():
+    for verb in (
+        "profile_model", "autotune_model", "map_model", "map_fleet",
+        "map_all_device", "price_mapping", "fuse_mapping",
+        "plan_single", "plan_fleet", "Deployment",
+    ):
+        assert verb in api.__all__
+        assert callable(getattr(api, verb))
+
+
+def test_aliases_are_the_implementations():
+    from repro.core.mapper import map_efficient_configuration
+    from repro.core.profiler import autotune_bnn_model, profile_bnn_model
+
+    assert api.profile_model is profile_bnn_model
+    assert api.autotune_model is autotune_bnn_model
+    assert api.map_model is map_efficient_configuration
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: bit-exact with the facade, warn once per site
+# ---------------------------------------------------------------------------
+
+
+def test_configuration_from_mapping_shim_bit_exact():
+    table = tied_table("m")
+    mapping = [CPU] * len(table.layer_labels)
+    from repro.core import configuration_from_mapping
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = configuration_from_mapping(table, 4, mapping)
+    assert old == api.price_mapping(table, 4, mapping)
+    msgs = [w for w in caught if w.category is DeprecationWarning]
+    assert len(msgs) == 1
+    assert "price_mapping" in str(msgs[0].message)
+
+
+def test_all_device_configuration_shim_bit_exact():
+    table = tied_table("m")
+    from repro.fleet import all_device_configuration
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = all_device_configuration(table)
+    assert old == api.map_all_device(table)
+    assert sum(
+        w.category is DeprecationWarning for w in caught
+    ) == 1
+
+
+def test_fuse_configuration_shim_bit_exact(small):
+    m, packed, _, _ = small
+    from tests.fixtures import flat_table
+    from repro.core.plan import fuse_configuration
+
+    table = flat_table(m)
+    config = api.price_mapping(
+        table, 4, [CPU] * len(table.layer_labels)
+    )
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = fuse_configuration(
+            m, packed, table, config, time_source="analytic", repeats=1
+        )
+    new = api.fuse_mapping(
+        m, packed, flat_table(m), config,
+        time_source="analytic", repeats=1,
+    )
+    assert old == new
+    assert any(
+        w.category is DeprecationWarning for w in caught
+    )
+
+
+def test_shim_warns_once_per_call_site():
+    table = tied_table("m")
+    mapping = [CPU] * len(table.layer_labels)
+    from repro.core import configuration_from_mapping
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for _ in range(5):   # one site, many calls
+            configuration_from_mapping(table, 4, mapping)
+        configuration_from_mapping(table, 4, mapping)  # second site
+    msgs = [w for w in caught if w.category is DeprecationWarning]
+    assert len(msgs) == 2
+
+
+# ---------------------------------------------------------------------------
+# planning helpers
+# ---------------------------------------------------------------------------
+
+
+def test_plan_single_maps_and_persists(tmp_path, small, monkeypatch):
+    m, packed, _, _ = small
+    from repro.store import ProfileStore
+
+    store = ProfileStore(tmp_path)
+    tp = api.plan_single(
+        m, packed, batch_sizes=(4,), store=store,
+        time_source="analytic", repeats=1,
+    )
+    assert tp.config.proper_batch_size == 4
+    assert tp.expected_s_per_example > 0
+    assert store.load_profile(m, (4,)) is not None
+    assert store.load_mapping(m, policy="dp", batch=4) is not None
+
+    # warm start: the second plan performs zero profiling passes
+    def boom(*a, **k):
+        raise AssertionError("profiled on a warm start")
+
+    monkeypatch.setattr(api, "profile_model", boom)
+    tp2 = api.plan_single(
+        m, packed, batch_sizes=(4,), store=store,
+        time_source="analytic", repeats=1,
+    )
+    assert tp2.config == tp.config
+
+
+def test_plan_fleet_returns_contention_priced_tenants(small):
+    m, packed, _, _ = small
+    tenants, plan = api.plan_fleet(
+        {"a": (m, packed), "b": (m, packed)},
+        batch_sizes=(4,), time_source="analytic", repeats=1,
+    )
+    assert set(tenants) == {"a", "b"}
+    assert plan.joint_makespan_s <= plan.baseline_makespan_s + 1e-12
+    for name, tp in tenants.items():
+        assert tp.name == name
+        assert tp.config.proper_batch_size == 4
+
+
+def test_plan_fleet_rejects_empty():
+    with pytest.raises(ValueError, match="at least one"):
+        api.plan_fleet({})
+
+
+# ---------------------------------------------------------------------------
+# Deployment
+# ---------------------------------------------------------------------------
+
+
+def test_deployment_single_serves_bit_exact(small):
+    m, packed, xw, ref = small
+    dep = api.Deployment.plan(
+        (m, packed), batch_sizes=(4,),
+        time_source="analytic", repeats=1,
+    )
+    assert dep.mode == "single"
+    dep.serve(max_batch=4)
+    reqs = [dep.submit(xw[i]) for i in range(8)]
+    assert dep.drain() == 8
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.result), ref[i])
+    s = dep.stats()
+    assert s["mode"] == "single" and s["served"] == 8
+
+
+def test_deployment_fleet_serves_both_tenants(small):
+    m, packed, xw, ref = small
+    dep = api.Deployment.plan(
+        {"a": (m, packed), "b": (m, packed)},
+        batch_sizes=(4,), time_source="analytic", repeats=1,
+    )
+    assert dep.mode == "fleet"
+    dep.serve(max_batch=4)
+    with pytest.raises(ValueError, match="tenant"):
+        dep.submit(xw[0])
+    reqs = {
+        n: [dep.submit(xw[i], tenant=n) for i in range(4)]
+        for n in ("a", "b")
+    }
+    assert dep.drain() == {"a": 4, "b": 4}
+    for rs in reqs.values():
+        for i, r in enumerate(rs):
+            np.testing.assert_array_equal(np.asarray(r.result), ref[i])
+    s = dep.stats()
+    assert s["mode"] == "fleet"
+    assert set(s["tenants"]) == {"a", "b"}
+    assert "ledger" in s
+
+
+def test_deployment_cluster_mode(small):
+    m, packed, xw, ref = small
+    dep = api.Deployment.plan(
+        {"a": (m, packed), "b": (m, packed)},
+        hosts=2, batch_sizes=(4,), time_source="analytic", repeats=1,
+    )
+    assert dep.mode == "cluster"
+    dep.serve(max_batch=4)
+    assert dep.cluster_plan.n_hosts == 2
+    reqs = [dep.submit(xw[i], tenant="a") for i in range(4)]
+    dep.submit(xw[0], tenant="b")
+    served = dep.drain()
+    assert served["a"] == 4 and served["b"] == 1
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.result), ref[i])
+    s = dep.stats()
+    assert s["mode"] == "cluster" and s["n_active"] == 2
+
+
+def test_deployment_requires_serve_before_submit(small):
+    m, packed, xw, _ = small
+    dep = api.Deployment.plan(
+        (m, packed), batch_sizes=(4,),
+        time_source="analytic", repeats=1,
+    )
+    with pytest.raises(RuntimeError, match="serve"):
+        dep.submit(xw[0])
+    with pytest.raises(RuntimeError, match="serve"):
+        dep.step()
+
+
+def test_deployment_configuration_accessor(small):
+    m, packed, _, _ = small
+    dep = api.Deployment.plan(
+        {"a": (m, packed), "b": (m, packed)},
+        batch_sizes=(4,), time_source="analytic", repeats=1,
+    )
+    assert dep.configuration("a").model_name == m.name
+    with pytest.raises(ValueError, match="name one"):
+        dep.configuration()
+
+
+def test_deployment_validates_hosts(small):
+    m, packed, _, _ = small
+    with pytest.raises(ValueError, match="hosts"):
+        api.Deployment.plan((m, packed), hosts=0)
+
+
+# ---------------------------------------------------------------------------
+# the facade is the only path examples need
+# ---------------------------------------------------------------------------
+
+
+def test_examples_avoid_internal_entrypoints():
+    """Serving examples go through ``repro.api`` — no direct imports
+    of the profiler or fleet-scheduler internals."""
+    import pathlib
+
+    root = pathlib.Path(__file__).resolve().parent.parent / "examples"
+    for name in ("serve_mapped.py", "serve_fleet.py"):
+        text = (root / name).read_text()
+        assert "repro.core.profiler" not in text, name
+        assert "repro.fleet.scheduler" not in text, name
+        assert "repro.api" in text or "from repro import api" in text, name
