@@ -1,8 +1,8 @@
 """CI bench-smoke: tiny-size benchmark run + regression gate.
 
 Runs ``kernel_bench``, ``segment_bench``, ``serve_bench``,
-``adapt_bench``, ``fleet_bench`` and ``cluster_bench`` at CI-sized
-settings (model ``scale=0.25``, batches
+``adapt_bench``, ``fleet_bench``, ``cluster_bench`` and
+``cachesvc_bench`` at CI-sized settings (model ``scale=0.25``, batches
 ``(1, 4)``, one timing repeat), writes the results as JSON (the
 ``BENCH_pr.json`` artifact the CI job uploads), and — with
 ``--check`` — fails when any metric regressed by more than the
@@ -17,7 +17,10 @@ co-run makespan win, bit-exact per tenant — so a broken loop fails the
 job outright, before any timing comparison.  ``cluster_bench`` asserts
 multi-host throughput scaling (>= 1.7x at 2 hosts, >= 3x at 4),
 cross-host noisy-tenant isolation, and a journaled elastic scale-up
-under surge.  ``segment_bench`` asserts
+under surge.  ``cachesvc_bench`` asserts the shared cache's
+warm-start hit rate (zero re-profiling on the serving path) and that
+the background explore loop recovers the ground-truth mapping from a
+planted-stale profile.  ``segment_bench`` asserts
 every applicable fused segment-scope variant bit-exact against the
 per-layer launch.  Their ``us=0`` sentinel rows are coverage-gated
 (missing from a PR run fails) but not timing-gated.
@@ -96,14 +99,21 @@ SMOKE_KWARGS = {
         "repeats": 1,
         "profile_repeats": 1,
     },
+    "cachesvc_bench": {
+        "scale": 0.25,
+        "batch": 4,
+        "warm_iters": 8,
+        "repeats": 1,
+        "profile_repeats": 1,
+    },
 }
 
 
 def collect() -> dict:
     """{metric_name: {"us": float, "derived": str}} over the suites."""
     from benchmarks import (
-        adapt_bench, cluster_bench, fleet_bench, kernel_bench,
-        segment_bench, serve_bench,
+        adapt_bench, cachesvc_bench, cluster_bench, fleet_bench,
+        kernel_bench, segment_bench, serve_bench,
     )
 
     metrics: dict = {}
@@ -114,6 +124,7 @@ def collect() -> dict:
         ("adapt_bench", adapt_bench.run),
         ("fleet_bench", fleet_bench.run),
         ("cluster_bench", cluster_bench.run),
+        ("cachesvc_bench", cachesvc_bench.run),
     ):
         for rname, us, derived in fn(**SMOKE_KWARGS[name]):
             metrics[rname] = {"us": round(float(us), 3), "derived": derived}

@@ -1,0 +1,174 @@
+"""Cache-service benchmark: shared-backend warm starts and the
+background exploration loop (docs/ARCHITECTURE.md §14).
+
+Two functional gates, both ``us=0`` sentinel rows (timings and
+hit-rates ride in ``derived``; the assertions are the gate):
+
+``cachesvc/warm_start_hit_rate``
+    One model is planned cold through :func:`repro.api.plan_single`
+    over a shared ``mem://`` backend, then re-planned ``warm_iters``
+    times.  Every warm plan must be served entirely from the cache:
+    the backend's miss counter is frozen after the cold pass (a miss
+    would mean re-profiling on the serving path), the aggregate hit
+    rate must clear 0.8, and every warm plan must reproduce the cold
+    plan's mapping exactly.
+
+``cachesvc/explore_stale_recovery``
+    The PR 4 residual, end to end: an analytically profiled table is
+    copied with one placement's kernel rows uniformly inflated (the
+    planted-stale regime — the mapper routes around the inflated
+    placement, so telemetry alone can never correct it).  One
+    :func:`repro.cachesvc.jobs.explore_once` pass re-measures the
+    stale frontier off the hot path (``measure_fn`` returns the
+    uninflated truth), folds the ratios back through
+    ``fold_observed``, and must persist a strictly better mapping.
+    Because the inflation is uniform, the fold is exact and the
+    persisted mapping must equal the ground-truth mapping computed on
+    the uninflated table — the explore loop fully recovers from the
+    staleness.  Exactly one measurement per frontier row, zero
+    profiler involvement.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro import api
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.cachesvc.jobs import execution_counts, explore_once
+from repro.core.mapper import (
+    DEVICE,
+    HOST,
+    map_efficient_configuration,
+    placement_of,
+)
+from repro.core.profiler import ProfileTable
+from repro.store import ProfileStore
+
+
+def _inflate(table: ProfileTable, placement: str, factor: float,
+             batch: int) -> ProfileTable:
+    """A stale copy of `table`: kernel rows of `placement` uniformly
+    slower by `factor`, totals rebuilt as kernel + unchanged
+    boundary."""
+    times, kernels = {batch: []}, {batch: []}
+    for layer in range(len(table.layer_labels)):
+        trow, krow = {}, {}
+        for cfg in table.configs_for(batch, layer):
+            t = table.times[batch][layer][cfg]
+            k = table.kernel_time(batch, layer, cfg)
+            if placement_of(cfg) == placement:
+                trow[cfg] = k * factor + (t - k)
+                krow[cfg] = k * factor
+            else:
+                trow[cfg], krow[cfg] = t, k
+        times[batch].append(trow)
+        kernels[batch].append(krow)
+    return ProfileTable(
+        table.model_name, (batch,), table.layer_labels, times,
+        kernel_times=kernels, h2d_times=table.h2d_times,
+        d2h_times=table.d2h_times,
+    )
+
+
+def run(
+    scale: float = 0.4,
+    batch: int = 4,
+    warm_iters: int = 8,
+    repeats: int = 1,
+    profile_repeats: int = 1,
+    stale_factor: float = 50.0,
+):
+    del repeats  # both rows are functional, not timing-swept
+    m = build_model("fashion_mnist", scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+
+    # -- warm starts through a shared backend ------------------------
+    store = ProfileStore("mem://")           # fresh anonymous backend
+    t0 = time.perf_counter()
+    cold = api.plan_single(
+        m, packed, batch_sizes=(batch,), store=store,
+        time_source="analytic", repeats=profile_repeats,
+    )
+    cold_s = time.perf_counter() - t0
+    misses_after_cold = store.stats()["misses"]
+    warm_s = []
+    for _ in range(warm_iters):
+        t0 = time.perf_counter()
+        warm = api.plan_single(
+            m, packed, batch_sizes=(batch,), store=store,
+            time_source="analytic", repeats=profile_repeats,
+        )
+        warm_s.append(time.perf_counter() - t0)
+        assert warm.config.layer_configs == cold.config.layer_configs
+    stats = store.stats()
+    assert stats["misses"] == misses_after_cold, (
+        "a warm plan missed the cache (re-profiled on the serving "
+        f"path): {stats}"
+    )
+    hit_rate = stats["hits"] / (stats["hits"] + stats["misses"])
+    assert hit_rate >= 0.8, f"warm-start hit rate only {hit_rate:.2f}"
+    rows = [(
+        "cachesvc/warm_start_hit_rate",
+        0.0,
+        f"hit_rate={hit_rate:.2f};cold_ms={cold_s * 1e3:.1f};"
+        f"warm_ms={min(warm_s) * 1e3:.2f};warm_iters={warm_iters}",
+    )]
+
+    # -- explore recovers a planted-stale mapping --------------------
+    true = api.profile_model(
+        m, packed, batch_sizes=(batch,), repeats=profile_repeats,
+        time_source="analytic",
+    )
+    truth = map_efficient_configuration(
+        true, policy="dp", batch_sizes=(batch,)
+    )
+    # inflate whichever placement's staleness actually distorts the
+    # mapping (50x always pushes the truth's own placements off)
+    for placement in (DEVICE, HOST):
+        stale = _inflate(true, placement, stale_factor, batch)
+        old = map_efficient_configuration(
+            stale, policy="dp", batch_sizes=(batch,)
+        )
+        if old.layer_configs != truth.layer_configs:
+            break
+    assert old.layer_configs != truth.layer_configs
+
+    xstore = ProfileStore("mem://")
+    xstore.save_mapping(old)
+    counts = execution_counts(old, steps=32)
+    measured = []
+
+    def measure_fn(layer, config, b):
+        measured.append((layer, config))
+        return true.kernel_time(b, layer, config)
+
+    out = explore_once(
+        xstore, m, stale, batch=batch, counts=counts,
+        measure_fn=measure_fn,
+    )
+    assert out["explored"] == len(measured) > 0
+    assert out["improved"] is True
+    assert out["new_expected_s"] < out["old_expected_s"]
+    refreshed = xstore.load_mapping(m, policy="dp", batch=batch)
+    assert refreshed.layer_configs != old.layer_configs
+    assert refreshed.layer_configs == truth.layer_configs, (
+        "explore did not recover the ground-truth mapping"
+    )
+    rows.append((
+        "cachesvc/explore_stale_recovery",
+        0.0,
+        f"explored={out['explored']};"
+        f"old_us={out['old_expected_s'] * 1e6:.1f};"
+        f"new_us={out['new_expected_s'] * 1e6:.1f};"
+        f"recovered_truth=True;stale_factor={stale_factor:g}",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

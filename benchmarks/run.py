@@ -26,6 +26,10 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                         (repro.cluster) — aggregate throughput vs host
                         count, noisy-tenant isolation, journaled
                         elastic scale-up
+  cachesvc_bench     -> beyond-paper: shared cache service
+                        (repro.cachesvc) — warm-start hit rate through
+                        a shared backend, background explore loop
+                        recovering a planted-stale mapping
   estimator_bench    -> beyond-paper: learned latency estimator
                         (repro.estimator) — predictor-seeded DP on an
                         unprofiled model (zero profiling passes) vs
@@ -45,9 +49,9 @@ import time
 
 def main() -> None:
     from benchmarks import (
-        adapt_bench, batch_sweep, cluster_bench, efficient_configs,
-        estimator_bench, fleet_bench, kernel_bench, profile_layers,
-        roofline, segment_bench, serve_bench,
+        adapt_bench, batch_sweep, cachesvc_bench, cluster_bench,
+        efficient_configs, estimator_bench, fleet_bench, kernel_bench,
+        profile_layers, roofline, segment_bench, serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -78,6 +82,8 @@ def main() -> None:
          SMOKE_KWARGS["fleet_bench"] if quick else {}),
         ("cluster_bench", cluster_bench.run,
          SMOKE_KWARGS["cluster_bench"] if quick else {}),
+        ("cachesvc_bench", cachesvc_bench.run,
+         SMOKE_KWARGS["cachesvc_bench"] if quick else {}),
         # not in bench_smoke: the gates inside the suite are the gate
         ("estimator_bench", estimator_bench.run,
          {"train_scales": (0.25, 0.375), "target_scale": 0.5}

@@ -109,6 +109,22 @@ class TenantPlan:
         return self.config.expected_time_per_example
 
 
+def _as_store(store):
+    """Normalize a ``store=`` argument: None passes through, a
+    :class:`~repro.store.ProfileStore` is used as-is, and anything
+    else — a root path, a ``dir://`` / ``sqlite://`` / ``mem://``
+    backend URI, or a :class:`~repro.cachesvc.StoreBackend` — becomes
+    a store over that backend.  This is how ``plan(store=...)``
+    accepts cache-service URIs everywhere a store object worked."""
+    if store is None:
+        return None
+    from repro.store import ProfileStore
+
+    if isinstance(store, ProfileStore):
+        return store
+    return ProfileStore(store)
+
+
 def _profile_fn(*, autotune, configs, repeats, time_source, registry):
     """The profiling callable plan_* hand to the store's
     ``get_or_profile`` (signature: model, packed, batch_sizes=...)."""
@@ -153,6 +169,7 @@ def plan_single(
     instead of the fixed 8; ``fuse=True`` additionally profiles
     segment-scope variants over the mapping's device segments and
     records the winners (:func:`fuse_mapping`)."""
+    store = _as_store(store)
     profile = _profile_fn(
         autotune=autotune, configs=configs, repeats=repeats,
         time_source=time_source, registry=registry,
@@ -209,6 +226,7 @@ def plan_fleet(
     solo deployments)."""
     if not models:
         raise ValueError("plan_fleet needs at least one tenant")
+    store = _as_store(store)
     names = tuple(models)
     profile = _profile_fn(
         autotune=autotune, configs=configs, repeats=repeats,
@@ -312,6 +330,7 @@ class Deployment:
         co-residents placement chose)."""
         if hosts < 1:
             raise ValueError("hosts must be >= 1")
+        store = _as_store(store)
         model_dict = _as_model_dict(models)
         single = len(model_dict) == 1 and hosts == 1
         if single:
@@ -421,6 +440,7 @@ class Deployment:
                                                    "least_loaded")),
                 engine_factory=engine_factory,
                 elastic=elastic,
+                store=self._knobs.get("store"),
                 **({} if clock is None else {"clock": clock}),
                 engine_kwargs=engine_kwargs,
             )

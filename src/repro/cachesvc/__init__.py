@@ -1,0 +1,62 @@
+"""Shared profile/mapping cache service (docs/ARCHITECTURE.md §14).
+
+Three layers, each usable alone:
+
+* :mod:`repro.cachesvc.backends` — pluggable keyed-text storage behind
+  :class:`~repro.store.ProfileStore` (``dir://`` bit-compatible with
+  the classic layout, ``sqlite://`` shared single-file, ``mem://``
+  in-process, tiered read-through composition, ETags, LRU/TTL
+  eviction, hit/miss/access counters).
+* :mod:`repro.cachesvc.workqueue` — a deduped, retrying async work
+  queue (`WorkQueue` + `WorkerPool`) with journaled
+  :class:`~repro.cachesvc.workqueue.JobRecord`\\ s.
+* :mod:`repro.cachesvc.service` / :mod:`repro.cachesvc.jobs` — the
+  background jobs (``prewarm`` / ``refit`` / ``explore``) and the
+  :class:`~repro.cachesvc.service.CacheService` that schedules them
+  off the serving path.
+
+Only the backend layer is imported eagerly: :mod:`repro.store` depends
+on it, while the service layer depends on :mod:`repro.store` — lazy
+attribute access keeps the cycle open.
+"""
+
+from repro.cachesvc.backends import (
+    EvictionPolicy,
+    LocalDirBackend,
+    MemoryBackend,
+    SqliteBackend,
+    StoreBackend,
+    TieredBackend,
+    parse_backend,
+)
+
+_LAZY = {
+    "JobRecord": "repro.cachesvc.workqueue",
+    "WorkQueue": "repro.cachesvc.workqueue",
+    "WorkerPool": "repro.cachesvc.workqueue",
+    "coverage_report": "repro.cachesvc.jobs",
+    "execution_counts": "repro.cachesvc.jobs",
+    "explore_once": "repro.cachesvc.jobs",
+    "prewarm_once": "repro.cachesvc.jobs",
+    "refit_once": "repro.cachesvc.jobs",
+    "CacheService": "repro.cachesvc.service",
+}
+
+__all__ = [
+    "EvictionPolicy",
+    "LocalDirBackend",
+    "MemoryBackend",
+    "SqliteBackend",
+    "StoreBackend",
+    "TieredBackend",
+    "parse_backend",
+    *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

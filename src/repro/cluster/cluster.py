@@ -13,6 +13,15 @@ topology changes that re-map a host's residents can apply with the
 engine's batch-boundary **hot swap** — a scale event never rebuilds a
 live engine, and every in-flight request completes under exactly one
 configuration.
+
+With a shared ``store`` (any :class:`~repro.store.ProfileStore`
+backend — typically ``sqlite://`` so every host reads one file), the
+cluster persists each host's jointly-mapped configurations under that
+co-tenancy's :func:`~repro.store.fleet_scope`, and scale events
+**warm-start from the cache**: a replication whose exact resident
+group was mapped before loads the stored configurations instead of
+re-running the joint mapper (``cache_hits``/``cache_misses`` count
+the outcomes).
 """
 
 from __future__ import annotations
@@ -25,6 +34,7 @@ from repro.cluster.elastic import ElasticController
 from repro.cluster.host import ACTIVE, RETIRED, ServingHost
 from repro.cluster.placement import place_tenants
 from repro.fleet.scheduler import map_fleet
+from repro.store import ProfileStore, fleet_scope
 
 
 class Cluster:
@@ -45,11 +55,15 @@ class Cluster:
         clock=time.monotonic,
         occupancy_window: int = 16,
         engine_kwargs: dict | None = None,
+        store=None,
     ):
         """`tenant_plans` are ``repro.api.TenantPlan``-like bundles
         (model, packed params, profile table, solo configuration).
         `elastic` is ``None`` (fixed pool), an
-        :class:`ElasticController`, or a dict of its knobs."""
+        :class:`ElasticController`, or a dict of its knobs.  `store`
+        is an optional shared :class:`~repro.store.ProfileStore` (or
+        backend URI) all hosts read mappings through (module
+        docstring)."""
         self.tenants = {tp.name: tp for tp in tenant_plans}
         if len(self.tenants) != len(tenant_plans):
             raise ValueError("tenant names must be unique")
@@ -70,6 +84,11 @@ class Cluster:
         if isinstance(elastic, dict):
             elastic = ElasticController(clock=clock, **elastic)
         self.elastic = elastic
+        if store is not None and not isinstance(store, ProfileStore):
+            store = ProfileStore(store)
+        self.store = store
+        self.cache_hits = 0
+        self.cache_misses = 0
 
         self.plan = place_tenants(
             tenant_plans, n_hosts, gamma=gamma, law=law,
@@ -83,6 +102,51 @@ class Cluster:
                 host.add_tenant(
                     self.tenants[name], self.plan.config_of(name)
                 )
+            # seed the shared cache with this co-tenancy's joint
+            # mappings, so a later scale-up replicating the same
+            # resident group warm-starts instead of re-mapping
+            if self.store is not None and a.tenant_names:
+                self._save_group(
+                    {
+                        name: self.plan.config_of(name)
+                        for name in a.tenant_names
+                    }
+                )
+
+    # -- shared-cache plumbing ----------------------------------------
+    def _group_store(self, names) -> "ProfileStore":
+        return self.store.with_scope(fleet_scope(names))
+
+    def _save_group(self, configs_by_name: dict) -> None:
+        scoped = self._group_store(tuple(configs_by_name))
+        for config in configs_by_name.values():
+            scoped.save_mapping(config)
+
+    def _load_group(self, group) -> dict | None:
+        """The cached jointly-mapped configurations for exactly this
+        resident group, or None unless *every* member has a stored
+        mapping that matches its table and the cluster's one serving
+        batch size (the hot-swap invariant)."""
+        from repro.store import signature_from_labels
+
+        scoped = self._group_store([t.name for t in group])
+        out = {}
+        for t in group:
+            config = scoped.load_mapping_for_labels(
+                signature_from_labels(
+                    t.table.model_name, t.table.layer_labels
+                ),
+                policy=self._mapping_policy,
+            )
+            if (
+                config is None
+                or config.layer_labels != t.table.layer_labels
+                or config.proper_batch_size
+                != t.config.proper_batch_size
+            ):
+                return None
+            out[t.name] = config
+        return out
 
     # -- pool plumbing -----------------------------------------------
     def _new_host(self) -> ServingHost:
@@ -110,17 +174,34 @@ class Cluster:
         set jointly so existing residents' configurations account for
         their new co-runner.  Residents whose mapping changed are
         batch-boundary hot-swapped (same serving batch size by the
-        cluster invariant), never rebuilt."""
+        cluster invariant), never rebuilt.
+
+        With a shared store, a resident group that was jointly mapped
+        before (any host, any process over the same backend) loads its
+        configurations from the cache instead of re-running the
+        mapper; a miss maps and writes back, so the next identical
+        scale event hits."""
         group = [self.tenants[n] for n in host.tenant_names()] + [tp]
-        plan = map_fleet(
-            [t.table for t in group],
-            names=[t.name for t in group],
-            policy=self._mapping_policy, configs=self._configs,
-            batch_sizes=self._batch_sizes,
-            weights=[t.weight for t in group],
-            gamma=self._gamma, law=self._law, registry=self._registry,
-        )
-        by_name = {t.name: t.config for t in plan.tenants}
+        by_name = None
+        if self.store is not None:
+            by_name = self._load_group(group)
+            if by_name is not None:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
+        if by_name is None:
+            plan = map_fleet(
+                [t.table for t in group],
+                names=[t.name for t in group],
+                policy=self._mapping_policy, configs=self._configs,
+                batch_sizes=self._batch_sizes,
+                weights=[t.weight for t in group],
+                gamma=self._gamma, law=self._law,
+                registry=self._registry,
+            )
+            by_name = {t.name: t.config for t in plan.tenants}
+            if self.store is not None:
+                self._save_group(by_name)
         for name in host.tenant_names():
             engine = host.router.tenant(name).engine
             new = by_name[name]
@@ -153,7 +234,11 @@ class Cluster:
         """Begin draining `host`.  Tenants whose only accepting
         replica lives there are first replicated onto the least-loaded
         remaining host, so no tenant loses service while the drain
-        completes.  Returns the moved tenant names."""
+        completes; then every tenant's *queued* (not-yet-dispatched)
+        requests migrate to an accepting replica — the draining host
+        finishes only what its engines already popped, instead of
+        slowly serving a backlog no new capacity can help with.
+        Returns the moved tenant names."""
         moved = []
         remaining = [h for h in self.active_hosts() if h is not host]
         if not remaining:
@@ -166,6 +251,16 @@ class Cluster:
                 )
                 self._replicate(self.tenants[name], target)
                 moved.append(name)
+        # hand off the queued backlog (dispatched batches stay — they
+        # complete bit-exact on the engines that popped them)
+        for name in host.tenant_names():
+            replicas = self._hosts_for(name)
+            if not replicas:
+                continue
+            target = min(
+                replicas, key=lambda h: (h.pending(), h.host_id)
+            )
+            host.migrate_queued(name, target)
         return tuple(moved)
 
     def on_retired(self, host: ServingHost) -> None:
@@ -221,4 +316,10 @@ class Cluster:
             out["elastic"] = [
                 r.to_dict() for r in self.elastic.journal
             ]
+        if self.store is not None:
+            out["cache"] = {
+                "hits": self.cache_hits,
+                "misses": self.cache_misses,
+                "backend": self.store.stats(),
+            }
         return out

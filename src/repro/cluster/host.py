@@ -107,6 +107,21 @@ class ServingHost:
             t.engine.batcher.pending() for t in self.router.tenants()
         )
 
+    def migrate_queued(self, tenant: str, target: "ServingHost") -> int:
+        """Hand `tenant`'s *queued* (admitted but not yet dispatched)
+        requests to `target`'s replica of the same tenant — the drain
+        hand-off path: requests an engine already popped still finish
+        here (bit-exact, never re-routed mid-batch), but work nothing
+        has started moves to a host that is still accepting.  Returns
+        requests moved."""
+        if not target.hosts_tenant(tenant):
+            raise ValueError(
+                f"host {target.host_id} has no replica of {tenant!r}"
+            )
+        src = self.router.tenant(tenant).engine.batcher
+        dst = target.router.tenant(tenant).engine.batcher
+        return src.migrate_to(dst)
+
     def step(self, *, force: bool = False) -> dict:
         """One router dispatch round, busy-metered for occupancy."""
         served = self.router.step(force=force)

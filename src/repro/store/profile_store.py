@@ -34,6 +34,17 @@ sizes and kernel space it was measured under, so entries are keyed by
   solo warm start can never pick one up (nor vice versa).  Scope-less
   entries stay where previous versions wrote them.
 
+**Backends.**  The store reads and writes through a pluggable
+:class:`~repro.cachesvc.backends.StoreBackend` (``root`` accepts a
+path, a ``dir://`` / ``sqlite://`` / ``mem://`` URI, or a backend
+instance — see ``repro.cachesvc``).  The entry *key* is the relative
+POSIX path of the layout below, identical across backends, so the
+default dir backend is bit-compatible with stores written before the
+backend layer existed.  Serving-path loads go through
+``backend.get`` — the hit/miss/access counters they feed are the
+cache service's prewarm popularity signal; maintenance reads
+(``entries``/``gc``/``export``) use counter-silent peeks.
+
 **Layout.**  ``root/v<schema>/<fingerprint>/<model>-r<registry>/`` with
 one JSON document per artifact (``profile-b<sizes>.json``,
 ``mapping-<policy>-b<batch>.json``), each wrapped in a versioned
@@ -41,8 +52,8 @@ envelope (schema, kind, saved_at, full key) around the payload's own
 versioned JSON (``ProfileTable.to_json`` /
 ``EfficientConfiguration.to_json``).  Loaders verify the envelope key
 before trusting a payload; unknown newer schemas are refused, not
-misread.  ``tools/profile_store.py`` gives ``inspect`` / ``gc`` /
-``export`` over the same layout.
+misread.  ``tools/profile_store.py`` gives ``inspect`` / ``stats`` /
+``gc`` / ``export`` over the same layout on any backend.
 
 **Training rows.**  Every profile run additionally appends estimator
 training rows (``repro.estimator.features``) under
@@ -50,7 +61,11 @@ training rows (``repro.estimator.features``) under
 ``training_rows`` — so :class:`~repro.estimator.LatencyPredictor`
 accumulates cross-model, cross-run data per (fingerprint, registry,
 scope) key (:meth:`ProfileStore.predictor` /
-``tools/profile_store.py fit``).
+``tools/profile_store.py fit``).  A *fitted* predictor and a
+calibrated interference law can be persisted beside the rows
+(:meth:`save_predictor` / :meth:`save_interference`) so the cache
+service's ``refit`` worker re-trains only when enough new rows
+accumulated since the last fit.
 """
 
 from __future__ import annotations
@@ -64,6 +79,7 @@ import time
 from pathlib import Path
 from typing import Callable, Sequence
 
+from repro.cachesvc.backends import parse_backend
 from repro.core.mapper import EfficientConfiguration
 from repro.core.profiler import ProfileTable
 
@@ -152,7 +168,10 @@ def fleet_scope(tenant_names: Sequence[str]) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class StoreEntry:
-    """One artifact on disk, as ``inspect`` reports it."""
+    """One stored artifact, as ``inspect`` reports it.  ``store_key``
+    is the backend key (the relative path on a dir backend); ``path``
+    is where that key lives — real on a dir backend, synthesized under
+    the display root elsewhere."""
 
     path: Path
     kind: str
@@ -160,6 +179,7 @@ class StoreEntry:
     saved_at: float
     key: dict
     size_bytes: int
+    store_key: str = ""
 
     @property
     def age_s(self) -> float:
@@ -175,7 +195,12 @@ class ProfileStore:
         registry=None,
         scope: str | None = None,
     ):
-        """``scope`` namespaces every artifact this handle reads or
+        """``root`` is a directory path (today's layout), a backend URI
+        (``dir://`` / ``sqlite://`` / ``mem://``), or a
+        :class:`~repro.cachesvc.backends.StoreBackend` instance —
+        handles constructed over the same backend share one cache.
+
+        ``scope`` namespaces every artifact this handle reads or
         writes (module docstring): a scoped store neither sees
         scope-less entries nor leaks into them — fleets pass
         :func:`fleet_scope` so per-co-tenancy mappings and solo
@@ -186,11 +211,35 @@ class ProfileStore:
             raise ValueError(
                 "scope must be a non-empty path-component-safe string"
             )
-        self.root = Path(root)
+        self.backend = parse_backend(root)
+        base = self.backend.path_for("")
+        if base is not None:
+            self.root = base
+        else:
+            # display root only — non-dir backends have no real files,
+            # but entries()/export() still report per-key paths under it
+            self.root = Path(
+                str(getattr(self.backend, "path", "") or self.backend.uri())
+            )
         self.scope = scope
         self._fingerprint = fingerprint
         self._registry = registry
         self._registry_hash: str | None = None
+
+    def with_scope(self, scope: str | None) -> "ProfileStore":
+        """A handle over the *same backend* (shared counters, shared
+        cache) under a different scope — how the cluster tier reads a
+        fleet's jointly-mapped artifacts from the shared store."""
+        return ProfileStore(
+            self.backend,
+            fingerprint=self._fingerprint,
+            registry=self._registry,
+            scope=scope,
+        )
+
+    def stats(self) -> dict:
+        """The backend's counters (hits/misses/puts/evictions)."""
+        return self.backend.stats()
 
     # -- keys --------------------------------------------------------
     @property
@@ -205,17 +254,38 @@ class ProfileStore:
             self._registry_hash = registry_hash(self._registry)
         return self._registry_hash
 
-    def _dir(self, model_sig: str) -> Path:
-        base = self.root / f"v{SCHEMA_VERSION}" / self.fingerprint
+    def _base_key(self) -> str:
+        parts = [f"v{SCHEMA_VERSION}", self.fingerprint]
         if self.scope is not None:
-            base = base / f"s-{self.scope}"
-        return base / f"{model_sig}-r{self.space_hash}"
+            parts.append(f"s-{self.scope}")
+        return "/".join(parts)
+
+    def _dir_key(self, model_sig: str) -> str:
+        return f"{self._base_key()}/{model_sig}-r{self.space_hash}"
+
+    def profile_key(self, model_sig: str, batch_sizes) -> str:
+        return (
+            f"{self._dir_key(model_sig)}"
+            f"/profile-b{_batch_key(batch_sizes)}.json"
+        )
+
+    def mapping_key(self, model_sig: str, policy: str, batch: int) -> str:
+        return (
+            f"{self._dir_key(model_sig)}/mapping-{policy}-b{int(batch)}.json"
+        )
+
+    def _path_of(self, key: str) -> Path:
+        p = self.backend.path_for(key)
+        return p if p is not None else self.root / key
+
+    def _dir(self, model_sig: str) -> Path:
+        return self._path_of(self._dir_key(model_sig))
 
     def profile_path(self, model_sig: str, batch_sizes) -> Path:
-        return self._dir(model_sig) / f"profile-b{_batch_key(batch_sizes)}.json"
+        return self._path_of(self.profile_key(model_sig, batch_sizes))
 
     def mapping_path(self, model_sig: str, policy: str, batch: int) -> Path:
-        return self._dir(model_sig) / f"mapping-{policy}-b{int(batch)}.json"
+        return self._path_of(self.mapping_key(model_sig, policy, batch))
 
     # -- envelope ----------------------------------------------------
     def _envelope(self, kind: str, key: dict, payload: dict) -> str:
@@ -236,16 +306,19 @@ class ProfileStore:
             indent=2,
         )
 
-    def _open(self, path: Path, kind: str) -> dict | None:
-        """Parse + verify an envelope; None when absent or keyed for a
-        different platform/registry (never served cross-key)."""
-        if not path.exists():
+    def _open(self, store_key: str, kind: str) -> dict | None:
+        """Read + verify an envelope; None when absent or keyed for a
+        different platform/registry (never served cross-key).  Goes
+        through ``backend.get`` so serving-path loads feed the cache
+        counters (the prewarm popularity signal)."""
+        text = self.backend.get(store_key)
+        if text is None:
             return None
-        doc = json.loads(path.read_text())
+        doc = json.loads(text)
         if doc.get("schema", 0) > SCHEMA_VERSION:
             raise ValueError(
-                f"{path}: store schema {doc.get('schema')} is newer than "
-                f"supported ({SCHEMA_VERSION}); upgrade the loader"
+                f"{store_key}: store schema {doc.get('schema')} is newer "
+                f"than supported ({SCHEMA_VERSION}); upgrade the loader"
             )
         if doc.get("kind") != kind:
             return None
@@ -260,11 +333,13 @@ class ProfileStore:
             return None
         return doc
 
+    def _put(self, store_key: str, doc: str) -> Path:
+        self.backend.put(store_key, doc)
+        return self._path_of(store_key)
+
     # -- profiles ----------------------------------------------------
     def save_profile(self, table: ProfileTable) -> Path:
         sig = signature_from_labels(table.model_name, table.layer_labels)
-        path = self.profile_path(sig, table.batch_sizes)
-        path.parent.mkdir(parents=True, exist_ok=True)
         spans = sorted(
             {
                 span
@@ -284,17 +359,14 @@ class ProfileStore:
             },
             json.loads(table.to_json()),
         )
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(doc)
-        os.replace(tmp, path)            # readers never see a torn file
-        return path
+        return self._put(self.profile_key(sig, table.batch_sizes), doc)
 
     def load_profile(
         self, model, batch_sizes: Sequence[int]
     ) -> ProfileTable | None:
         sig = model_signature(model)
         doc = self._open(
-            self.profile_path(sig, batch_sizes), "profile_table"
+            self.profile_key(sig, batch_sizes), "profile_table"
         )
         if doc is None:
             return None
@@ -321,15 +393,15 @@ class ProfileStore:
         return table, False
 
     # -- estimator training data -------------------------------------
+    def _training_key(self) -> str:
+        return f"{self._base_key()}/training-r{self.space_hash}"
+
     def training_dir(self) -> Path:
         """Training rows live beside the per-model dirs, keyed by the
         same (fingerprint, registry, scope) — rows measured under one
         kernel space or platform never train a predictor for
         another."""
-        base = self.root / f"v{SCHEMA_VERSION}" / self.fingerprint
-        if self.scope is not None:
-            base = base / f"s-{self.scope}"
-        return base / f"training-r{self.space_hash}"
+        return self._path_of(self._training_key())
 
     def _record_training_rows(self, model, table) -> None:
         """Every real profile run feeds the estimator's training set —
@@ -375,8 +447,6 @@ class ProfileStore:
                     for r in rows
                 )
             )
-        path = self.training_dir() / f"rows-{_digest([source])}.json"
-        path.parent.mkdir(parents=True, exist_ok=True)
         doc = self._envelope(
             "training_rows",
             {
@@ -386,20 +456,20 @@ class ProfileStore:
             },
             {"rows": rows},
         )
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(doc)
-        os.replace(tmp, path)
-        return path
+        return self._put(
+            f"{self._training_key()}/rows-{_digest([source])}.json", doc
+        )
 
     def load_training_rows(self) -> list:
         """Every training row stored under this handle's key, across
         all saved batches — the estimator's training set."""
         rows: list = []
-        d = self.training_dir()
-        if not d.exists():
-            return rows
-        for path in sorted(d.glob("rows-*.json")):
-            doc = self._open(path, "training_rows")
+        prefix = self._training_key() + "/"
+        for store_key in self.backend.list(prefix):
+            name = store_key[len(prefix):]
+            if not (name.startswith("rows-") and name.endswith(".json")):
+                continue
+            doc = self._open(store_key, "training_rows")
             if doc is None:
                 continue
             rows.extend(doc["payload"].get("rows", ()))
@@ -417,13 +487,74 @@ class ProfileStore:
             return None
         return LatencyPredictor(**kwargs).fit(rows)
 
+    # -- fitted estimator artifacts (cachesvc refit worker) ----------
+    def _predictor_key(self) -> str:
+        return f"{self._training_key()}/latency-predictor.json"
+
+    def save_predictor(self, predictor, *, source_rows: int) -> Path:
+        """Persist a *fitted* predictor with the training-set size it
+        was fitted on, so the refit worker can tell when enough new
+        rows accumulated to justify retraining."""
+        doc = self._envelope(
+            "latency_predictor",
+            {
+                "n_rows": int(getattr(predictor, "n_rows", 0)),
+                "source_rows": int(source_rows),
+            },
+            json.loads(predictor.to_json()),
+        )
+        return self._put(self._predictor_key(), doc)
+
+    def load_predictor(self):
+        """The persisted fitted predictor, or None."""
+        from repro.estimator.latency import LatencyPredictor
+
+        doc = self._open(self._predictor_key(), "latency_predictor")
+        if doc is None:
+            return None
+        return LatencyPredictor.from_json(json.dumps(doc["payload"]))
+
+    def predictor_meta(self) -> dict | None:
+        """{'n_rows', 'source_rows', 'saved_at'} of the persisted
+        predictor (counter-silent), or None when never fitted."""
+        text = self.backend.peek(self._predictor_key())
+        if text is None:
+            return None
+        doc = json.loads(text)
+        if doc.get("kind") != "latency_predictor":
+            return None
+        key = doc.get("key", {})
+        return {
+            "n_rows": int(key.get("n_rows", 0)),
+            "source_rows": int(key.get("source_rows", 0)),
+            "saved_at": float(doc.get("saved_at", 0.0)),
+        }
+
+    def _interference_key(self) -> str:
+        return f"{self._training_key()}/interference-law.json"
+
+    def save_interference(self, law) -> Path:
+        """Persist a calibrated contention law
+        (:class:`~repro.estimator.interference.FittedInterference`)."""
+        doc = self._envelope(
+            "interference_law",
+            {"n_obs": int(getattr(law, "n_obs", 0))},
+            json.loads(law.to_json()),
+        )
+        return self._put(self._interference_key(), doc)
+
+    def load_interference(self):
+        """The persisted contention law, or None."""
+        from repro.estimator.interference import FittedInterference
+
+        doc = self._open(self._interference_key(), "interference_law")
+        if doc is None:
+            return None
+        return FittedInterference.from_json(json.dumps(doc["payload"]))
+
     # -- mappings ----------------------------------------------------
     def save_mapping(self, config: EfficientConfiguration) -> Path:
         sig = signature_from_labels(config.model_name, config.layer_labels)
-        path = self.mapping_path(
-            sig, config.policy, config.proper_batch_size
-        )
-        path.parent.mkdir(parents=True, exist_ok=True)
         fused = getattr(config, "fused_segments", ())
         doc = self._envelope(
             "efficient_configuration",
@@ -440,10 +571,12 @@ class ProfileStore:
             },
             json.loads(config.to_json()),
         )
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(doc)
-        os.replace(tmp, path)
-        return path
+        return self._put(
+            self.mapping_key(
+                sig, config.policy, config.proper_batch_size
+            ),
+            doc,
+        )
 
     def load_mapping(
         self, model, *, policy: str = "dp", batch: int | None = None
@@ -451,22 +584,46 @@ class ProfileStore:
         """The stored mapping for (platform, model, registry) —
         at `batch` when given, else the most recently saved one for
         `policy`."""
-        sig = model_signature(model)
+        return self.load_mapping_for_labels(
+            model_signature(model), policy=policy, batch=batch
+        )
+
+    def load_mapping_for_labels(
+        self,
+        model_sig: str,
+        *,
+        policy: str = "dp",
+        batch: int | None = None,
+    ) -> EfficientConfiguration | None:
+        """:meth:`load_mapping` by precomputed signature
+        (:func:`signature_from_labels`) — for callers that hold a
+        table/configuration but no model object (the cluster tier's
+        warm start)."""
+        sig = model_sig
         if batch is not None:
-            paths = [self.mapping_path(sig, policy, batch)]
+            keys = [self.mapping_key(sig, policy, batch)]
         else:
-            paths = sorted(
-                self._dir(sig).glob(f"mapping-{policy}-b*.json"),
-                key=lambda p: p.stat().st_mtime,
-                reverse=True,
-            ) if self._dir(sig).exists() else []
-        for path in paths:
-            doc = self._open(path, "efficient_configuration")
-            if doc is not None:
-                return EfficientConfiguration.from_json(
-                    json.dumps(doc["payload"])
-                )
-        return None
+            prefix = self._dir_key(sig) + "/"
+            stem = f"mapping-{policy}-b"
+            keys = [
+                k for k in self.backend.list(prefix)
+                if k[len(prefix):].startswith(stem)
+                and k.endswith(".json")
+            ]
+        best = None
+        for store_key in keys:
+            doc = self._open(store_key, "efficient_configuration")
+            if doc is None:
+                continue
+            if best is None or doc.get("saved_at", 0.0) > best.get(
+                "saved_at", 0.0
+            ):
+                best = doc
+        if best is None:
+            return None
+        return EfficientConfiguration.from_json(
+            json.dumps(best["payload"])
+        )
 
     def warm_start(
         self,
@@ -498,26 +655,29 @@ class ProfileStore:
 
     # -- maintenance (tools/profile_store.py) ------------------------
     def entries(self) -> list:
-        """Every parseable artifact under the root, newest first —
-        including other schemas/fingerprints (inspect sees all)."""
+        """Every parseable artifact in the backend, newest first —
+        including other schemas/fingerprints (inspect sees all).
+        Counter-silent: maintenance must not skew popularity."""
         out = []
-        if not self.root.exists():
-            return out
-        for path in sorted(self.root.rglob("*.json")):
-            try:
-                doc = json.loads(path.read_text())
-            except (OSError, json.JSONDecodeError):
+        for store_key in self.backend.list():
+            text = self.backend.peek(store_key)
+            if text is None:
                 continue
-            if "kind" not in doc:
+            try:
+                doc = json.loads(text)
+            except json.JSONDecodeError:
+                continue
+            if not isinstance(doc, dict) or "kind" not in doc:
                 continue
             out.append(
                 StoreEntry(
-                    path=path,
+                    path=self._path_of(store_key),
                     kind=doc.get("kind", "?"),
                     schema=int(doc.get("schema", 0)),
                     saved_at=float(doc.get("saved_at", 0.0)),
                     key=doc.get("key", {}),
-                    size_bytes=path.stat().st_size,
+                    size_bytes=len(text.encode()),
+                    store_key=store_key,
                 )
             )
         out.sort(key=lambda e: e.saved_at, reverse=True)
@@ -529,7 +689,7 @@ class ProfileStore:
         """Remove stale artifacts: anything from an older store schema,
         plus (when ``max_age_s`` is set) current-schema entries older
         than that.  Returns the removed paths; empty directories are
-        pruned."""
+        pruned (dir backends)."""
         removed = []
         for entry in self.entries():
             stale = entry.schema < SCHEMA_VERSION or (
@@ -539,15 +699,11 @@ class ProfileStore:
                 continue
             removed.append(entry.path)
             if not dry_run:
-                entry.path.unlink()
-        if not dry_run and self.root.exists():
-            for d in sorted(
-                (p for p in self.root.rglob("*") if p.is_dir()),
-                key=lambda p: len(p.parts),
-                reverse=True,
-            ):
-                if not any(d.iterdir()):
-                    d.rmdir()
+                self.backend.delete(entry.store_key)
+        if not dry_run:
+            prune = getattr(self.backend, "prune_empty_dirs", None)
+            if prune is not None:
+                prune()
         return removed
 
     def export(self) -> dict:
@@ -559,8 +715,10 @@ class ProfileStore:
             "exported_at": time.time(),
             "entries": [
                 {
-                    "path": str(e.path.relative_to(self.root)),
-                    "document": json.loads(e.path.read_text()),
+                    "path": e.store_key,
+                    "document": json.loads(
+                        self.backend.peek(e.store_key)
+                    ),
                 }
                 for e in self.entries()
             ],

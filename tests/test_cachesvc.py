@@ -1,0 +1,493 @@
+"""Cache service: deduped/retried/journaled work queue (all backoff
+under virtual time — zero real sleeps), worker pool, and the three
+job kinds.  The explore tests pin the PR 4 residual closure: a
+planted-stale profile row is re-measured off the hot path, folded
+back through ``fold_observed``, and produces a strictly better
+persisted mapping with zero profiling on the serving path.
+"""
+
+import time
+
+import pytest
+
+import jax
+
+from repro import api
+from repro.bnn import build_model
+from repro.bnn.models import pack_params
+from repro.cachesvc import CacheService, WorkerPool, WorkQueue
+from repro.cachesvc.jobs import (
+    coverage_report,
+    execution_counts,
+    explore_once,
+    prewarm_once,
+    refit_once,
+)
+from repro.core.mapper import (
+    DEVICE, HOST, map_efficient_configuration, placement_of,
+)
+from repro.core.parallel_config import CONFIGS, CPU
+from repro.core.profiler import ProfileTable
+from repro.store import ProfileStore
+
+from tests.fixtures import FakeClock, flat_table, planted_gamma_ledger
+from tests.test_cluster import fake_cluster, fake_tenant
+
+def _packed(m):
+    return pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# work queue: dedupe, retry/backoff (virtual time), journal
+# ---------------------------------------------------------------------------
+
+
+def test_submit_dedupes_live_identities():
+    q = WorkQueue(clock=FakeClock())
+    assert q.submit("prewarm", "k1", lambda: None) is True
+    assert q.submit("prewarm", "k1", lambda: None) is False
+    assert q.submit("refit", "k1", lambda: None) is True    # kind differs
+    assert q.submit("prewarm", "k2", lambda: None) is True
+    assert q.stats()["submitted"] == 3 and q.stats()["deduped"] == 1
+    q.run_pending()
+    # a finished identity may be resubmitted (idempotent jobs)
+    assert q.submit("prewarm", "k1", lambda: None) is True
+
+
+def test_retry_backoff_schedule_is_virtual_time_only():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock, max_attempts=3, backoff_s=0.5)
+    attempt_times = []
+
+    def flaky():
+        attempt_times.append(clock())
+        if len(attempt_times) < 3:
+            raise RuntimeError("transient")
+        return {"ok": True}
+
+    q.submit("prewarm", "k", flaky)
+    wall = time.monotonic()
+    ran = q.drain(sleep=clock.advance)
+    wall = time.monotonic() - wall
+    assert ran == 3 and wall < 1.0          # no real sleeping
+    # exponential schedule: +0.5 after attempt 1, +1.0 after attempt 2
+    assert attempt_times[1] - attempt_times[0] == pytest.approx(
+        0.5, abs=1e-6
+    )
+    assert attempt_times[2] - attempt_times[1] == pytest.approx(
+        1.0, abs=1e-6
+    )
+    assert q.stats()["retries"] == 2
+    (rec,) = q.journal
+    assert rec.status == "done" and rec.attempts == 3
+    assert rec.result == {"ok": True}
+
+
+def test_permanent_failure_journaled_after_max_attempts():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock, max_attempts=2, backoff_s=0.1)
+
+    def broken():
+        raise ValueError("planted failure")
+
+    q.submit("explore", "bad-key", broken)
+    assert q.drain(sleep=clock.advance) == 2
+    (rec,) = q.journal
+    assert rec.status == "failed" and rec.attempts == 2
+    assert rec.error == "ValueError: planted failure"
+    assert rec.result is None
+    assert q.stats() == {
+        "queued": 0, "running": 0, "submitted": 1, "deduped": 0,
+        "retries": 1, "done": 0, "failed": 1,
+    }
+
+
+def test_run_pending_respects_backoff_deadlines():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock, max_attempts=3, backoff_s=1.0)
+    calls = []
+
+    def once_flaky():
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("once")
+
+    q.submit("refit", "k", once_flaky)
+    # first pass fails, job is re-queued 1s in the future
+    assert q.run_pending() == 1
+    assert q.pending() == 1
+    assert q.run_pending() == 0             # not due yet
+    assert q.next_due_s() == pytest.approx(1.0)
+    clock.advance(1.0)
+    assert q.run_pending() == 1
+    assert q.journal[-1].status == "done"
+
+
+def test_job_record_to_dict_round_trips():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock)
+    clock.advance(3.0)
+    q.submit("prewarm", "k", lambda: {"n": 1})
+    q.run_pending()
+    d = q.journal[0].to_dict()
+    assert d["seq"] == 0 and d["kind"] == "prewarm"
+    assert d["enqueued_s"] == 3.0 and d["finished_s"] == 3.0
+    assert d["result"] == {"n": 1}
+
+
+def test_worker_pool_drains_in_background():
+    q = WorkQueue()                          # real clock for threads
+    done = []
+    for i in range(8):
+        q.submit("prewarm", f"k{i}", lambda i=i: done.append(i))
+    pool = WorkerPool(q, n_workers=3).start()
+    try:
+        with pytest.raises(RuntimeError):
+            pool.start()                     # already started
+        assert pool.alive == 3
+        assert pool.join_idle(timeout=5.0)
+        assert sorted(done) == list(range(8))
+        assert all(r.status == "done" for r in q.journal)
+    finally:
+        pool.stop()
+    assert pool.alive == 0
+
+
+def test_queue_validates_knobs():
+    with pytest.raises(ValueError):
+        WorkQueue(max_attempts=0)
+    with pytest.raises(ValueError):
+        WorkQueue(backoff_s=-1.0)
+    with pytest.raises(ValueError):
+        WorkerPool(WorkQueue(), n_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# coverage accounting
+# ---------------------------------------------------------------------------
+
+
+def _stale_device_table(model, *, batch=4, cpu=1e-3, dev=5e-3,
+                        bnd=1e-5):
+    """Device kernel rows inflated (stale) relative to host: the solo
+    mapper keeps everything on host, so device placements never
+    execute and telemetry can never correct them — the explore loop's
+    target regime."""
+    n = len(model.specs)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
+    times = {batch: [
+        {c: cpu if c == CPU else dev + 2 * bnd for c in CONFIGS}
+        for _ in range(n)
+    ]}
+    kernels = {batch: [
+        {c: cpu if c == CPU else dev for c in CONFIGS}
+        for _ in range(n)
+    ]}
+    return ProfileTable(
+        model.name, (batch,), labels, times, kernel_times=kernels,
+        h2d_times={batch: [bnd] * n}, d2h_times={batch: [bnd] * n},
+    )
+
+
+def test_execution_counts_accumulates_across_mappings():
+    m = build_model("fashion_mnist", scale=0.25)
+    t = flat_table(m)
+    host = map_efficient_configuration(t, policy="greedy")
+    counts = execution_counts(host, 10)
+    assert all(n == 10 for n in counts.values())
+    assert len(counts) == len(t.layer_labels)
+    counts = execution_counts(host, 5, into=counts)   # after a swap
+    assert all(n == 15 for n in counts.values())
+
+
+def test_coverage_report_flags_unexecuted_placements():
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _stale_device_table(m)
+    solo = map_efficient_configuration(t, policy="dp")
+    assert all(placement_of(c) == HOST for c in solo.layer_configs)
+    counts = execution_counts(solo, steps=10)
+    rows = coverage_report(t, 4, counts)
+    # every layer's device side is unexplored; host side is covered
+    assert len(rows) == len(t.layer_labels)
+    assert all(r.placement == DEVICE and r.executed == 0 for r in rows)
+    assert all(r.candidates for r in rows)
+    # raising min_count pulls the executed host side into the frontier
+    rows = coverage_report(t, 4, counts, min_count=11)
+    assert len(rows) == 2 * len(t.layer_labels)
+    with pytest.raises(ValueError):
+        coverage_report(t, 16, counts)      # batch never profiled
+
+
+# ---------------------------------------------------------------------------
+# job bodies
+# ---------------------------------------------------------------------------
+
+
+def test_prewarm_once_is_idempotent_zero_profiling_on_rerun(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = _packed(m)
+    calls = {"profile": 0}
+
+    def profile_fn(model, pp, *, batch_sizes):
+        calls["profile"] += 1
+        return flat_table(model, batch=batch_sizes[0])
+
+    store = ProfileStore(f"sqlite://{tmp_path}/c.db", fingerprint="fp")
+    r1 = prewarm_once(store, m, packed, profile_fn=profile_fn,
+                      batch_sizes=(4,))
+    assert r1["profiled"] is True and r1["mapped"] is True
+    assert calls["profile"] == 1
+    r2 = prewarm_once(store, m, packed, profile_fn=profile_fn,
+                      batch_sizes=(4,))
+    assert r2["profiled"] is False and r2["mapped"] is False
+    assert calls["profile"] == 1            # fully warmed: no work
+    assert r2["batch"] == r1["batch"]
+
+
+def test_refit_once_thresholds_on_new_rows(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = _packed(m)
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    store.get_or_profile(
+        m, packed,
+        lambda model, pp, *, batch_sizes: flat_table(model),
+        batch_sizes=(4,),
+    )
+    n_rows = len(store.load_training_rows())
+    assert n_rows > 0                       # profiling fed the set
+    out = refit_once(store, min_new_rows=n_rows + 1)
+    assert out["refit"] is False            # not enough rows yet
+    assert store.load_predictor() is None
+    out = refit_once(store, min_new_rows=1)
+    assert out["refit"] is True and out["rows"] == n_rows
+    pred = store.load_predictor()
+    assert pred is not None and pred.n_rows > 0
+    # idempotent: nothing new accumulated since the fit
+    out = refit_once(store, min_new_rows=1)
+    assert out["refit"] is False and out["new_rows"] == 0
+
+
+def test_refit_once_fits_interference_from_observations(tmp_path):
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    ledger, expected = planted_gamma_ledger(0.8)
+    out = refit_once(store, observations=(ledger, expected))
+    assert out["interference"] is True
+    law = store.load_interference()
+    assert law is not None
+    assert law.gamma == pytest.approx(0.8, abs=0.05)
+    assert out["gamma"] == law.gamma
+
+
+def test_explore_corrects_planted_stale_row(tmp_path):
+    """The acceptance scenario: device rows are stale-slow, so the
+    stored mapping pins everything to host and telemetry can never
+    see the truth.  One explore pass re-measures off the hot path and
+    must persist a strictly better, different mapping — with zero
+    profiling on the serving path."""
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _stale_device_table(m, cpu=1e-3, dev=5e-3)
+    store = ProfileStore(f"sqlite://{tmp_path}/c.db", fingerprint="fp")
+    old = map_efficient_configuration(t, policy="dp", batch_sizes=(4,))
+    assert all(placement_of(c) == HOST for c in old.layer_configs)
+    store.save_mapping(old)
+    counts = execution_counts(old, steps=25)
+
+    measured = []
+
+    def measure_fn(layer, config, batch):
+        measured.append((layer, config, batch))
+        return 1e-4                          # the truth: device is fast
+
+    out = explore_once(store, m, t, batch=4, counts=counts,
+                       measure_fn=measure_fn)
+    assert out["explored"] == len(t.layer_labels)
+    assert out["improved"] is True
+    assert out["new_expected_s"] < out["old_expected_s"]
+    # measurement happened off the hot path, once per stale row, and
+    # never touched the profiler
+    assert len(measured) == len(t.layer_labels)
+    assert all(placement_of(c) == DEVICE for _, c, _ in measured)
+
+    refreshed = store.load_mapping(m, policy="dp", batch=4)
+    assert refreshed.layer_configs != old.layer_configs
+    assert all(
+        placement_of(c) == DEVICE for c in refreshed.layer_configs
+    )
+    # the corrected table is session-local: the stored profile (none
+    # was ever saved here) and the table object are untouched
+    assert t.kernel_time(4, 0, refreshed.layer_configs[0]) == 5e-3
+
+    # with the frontier covered, a second pass is a no-op
+    covered = execution_counts(refreshed, 25, into=dict(counts))
+    out2 = explore_once(store, m, t, batch=4, counts=covered,
+                        measure_fn=measure_fn)
+    assert out2 == {"explored": 0, "improved": False}
+
+
+def test_explore_keeps_old_mapping_when_measurement_confirms(tmp_path):
+    """Measured times that agree with the stored profile must not
+    churn the persisted mapping."""
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _stale_device_table(m, cpu=1e-3, dev=5e-3)
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    old = map_efficient_configuration(t, policy="dp", batch_sizes=(4,))
+    store.save_mapping(old)
+    counts = execution_counts(old, steps=25)
+    out = explore_once(
+        store, m, t, batch=4, counts=counts,
+        measure_fn=lambda layer, c, b: t.kernel_time(b, layer, c),
+    )
+    assert out["improved"] is False
+    kept = store.load_mapping(m, policy="dp", batch=4)
+    assert kept.layer_configs == old.layer_configs
+
+
+# ---------------------------------------------------------------------------
+# CacheService: catalog, popularity, journaled background jobs
+# ---------------------------------------------------------------------------
+
+
+def _service(tmp_path, **kwargs):
+    m1 = build_model("fashion_mnist", scale=0.25)
+    m2 = build_model("fashion_mnist", scale=0.5)
+    calls = {"profile": 0}
+
+    def profile_fn(model, pp, *, batch_sizes):
+        calls["profile"] += 1
+        return flat_table(model, batch=batch_sizes[0])
+
+    svc = CacheService(
+        ProfileStore(tmp_path, fingerprint="fp"),
+        profile_fn=profile_fn, batch_sizes=(4,),
+        clock=kwargs.pop("clock", FakeClock()), **kwargs,
+    )
+    svc.register("small", m1, _packed(m1))
+    svc.register("large", m2, _packed(m2))
+    return svc, calls
+
+
+def test_service_prewarm_jobs_dedupe_and_journal(tmp_path):
+    svc, calls = _service(tmp_path)
+    assert svc.catalog == ("large", "small")
+    assert svc.enqueue_prewarm("small") is True
+    assert svc.enqueue_prewarm("small") is False    # deduped
+    assert svc.enqueue_prewarm("large") is True
+    assert svc.run_pending() == 2
+    assert calls["profile"] == 2
+    recs = svc.journal
+    assert [r.kind for r in recs] == ["prewarm", "prewarm"]
+    assert all(r.status == "done" for r in recs)
+    assert all(r.result["profiled"] for r in recs)
+    # jobs are keyed like the store entries they materialize
+    assert recs[0].key.endswith("profile-b4.json")
+    # warmed: a re-run does no profiling
+    assert svc.enqueue_prewarm("small") is True
+    svc.run_pending()
+    assert calls["profile"] == 2
+    assert svc.journal[-1].result == {
+        "profiled": False, "mapped": False, "batch": 4,
+        "expected_s": svc.journal[-1].result["expected_s"],
+    }
+
+
+def test_service_popularity_ranks_by_store_access(tmp_path):
+    svc, calls = _service(tmp_path)
+    svc.enqueue_prewarm("small")
+    svc.enqueue_prewarm("large")
+    svc.run_pending()
+    m2, _ = svc._catalog["large"]
+    for _ in range(3):                       # real traffic loads large
+        assert svc.store.load_profile(m2, (4,)) is not None
+    pop = svc.popularity()
+    assert pop["large"] > pop["small"]
+    assert svc.prewarm_popular(top=1) == 1
+    svc.run_pending()
+    assert svc._sig("large") in svc.journal[-1].key
+    s = svc.stats()
+    assert s["store"]["hits"] >= 3 and s["queue"]["done"] == 3
+
+
+def test_service_refit_and_guards(tmp_path):
+    svc, _ = _service(tmp_path)
+    svc.enqueue_prewarm("small")
+    svc.run_pending()                        # records training rows
+    svc.refit_min_new_rows = 1
+    assert svc.enqueue_refit() is True
+    assert svc.enqueue_refit() is False      # deduped while queued
+    svc.run_pending()
+    assert svc.journal[-1].kind == "refit"
+    assert svc.journal[-1].result["refit"] is True
+    assert svc.store.load_predictor() is not None
+
+    model, packed = svc._catalog["small"]
+    bare = CacheService(ProfileStore(tmp_path / "bare"))
+    bare.register("m", model, packed)
+    with pytest.raises(ValueError):
+        bare.enqueue_prewarm("m")            # no profile_fn
+    with pytest.raises(ValueError):
+        bare.enqueue_explore("m", flat_table(model), batch=4, counts={})
+
+
+def test_service_explore_closes_stale_row_through_queue(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _stale_device_table(m)
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    old = map_efficient_configuration(t, policy="dp", batch_sizes=(4,))
+    store.save_mapping(old)
+    svc = CacheService(store, measure_fn=lambda l, c, b: 1e-4,
+                       clock=FakeClock())
+    svc.register("m", m, _packed(m))
+    assert svc.enqueue_explore(
+        "m", t, batch=4, counts=execution_counts(old, 25)
+    ) is True
+    assert svc.drain(sleep=svc.queue.clock.advance) == 1
+    rec = svc.journal[-1]
+    assert rec.kind == "explore" and rec.status == "done"
+    assert rec.result["improved"] is True
+    assert store.load_mapping(
+        m, policy="dp", batch=4
+    ).layer_configs != old.layer_configs
+
+
+# ---------------------------------------------------------------------------
+# wiring: api store URIs, cluster shared-cache warm start
+# ---------------------------------------------------------------------------
+
+
+def test_plan_single_reads_through_backend_uri(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    packed = _packed(m)
+    store = ProfileStore(f"sqlite://{tmp_path}/api.db")
+    tp1 = api.plan_single(
+        m, packed, batch_sizes=(4,), store=store,
+        time_source="analytic", repeats=1,
+    )
+    before = store.stats()["hits"]
+    tp2 = api.plan_single(
+        m, packed, batch_sizes=(4,), store=store,
+        time_source="analytic", repeats=1,
+    )
+    # the second plan warm-started: the profile came from the cache
+    assert store.stats()["hits"] > before
+    assert tp2.config.layer_configs == tp1.config.layer_configs
+    assert tp2.table.times == tp1.table.times
+
+
+def test_cluster_warm_starts_scale_up_from_shared_store():
+    tenants = [fake_tenant("a"), fake_tenant("b")]
+    _clock, cluster = fake_cluster(
+        tenants, n_hosts=1, store="mem://warm-start-test"
+    )
+    assert cluster.cache_hits == 0 and cluster.cache_misses == 0
+    cluster.scale_up()
+    # replicating onto the empty host first re-maps tenant a solo (a
+    # group never seen: miss), then lands on the seeded {a, b} joint
+    # group: hit — the mapper run is skipped entirely
+    assert cluster.cache_hits == 1
+    assert cluster.cache_misses == 1
+    stats = cluster.stats()
+    assert stats["cache"]["hits"] == 1
+    assert stats["cache"]["backend"]["backend"] == "mem"
+    # every host serves every tenant after the scale-up
+    for name in ("a", "b"):
+        assert len(cluster._hosts_for(name)) == 2

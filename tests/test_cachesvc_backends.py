@@ -1,0 +1,379 @@
+"""Cache-service backend layer: one shared contract suite over the
+dir / sqlite / mem backends (plus the tiered composition), URI
+resolution, eviction policies, and ProfileStore bit-compatibility —
+a store grown under the old plain-directory layout must load
+unchanged through the backend layer, and the same artifacts must
+round-trip through a single-file sqlite backend.
+"""
+
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax  # noqa: F401  (initialize before repro imports)
+
+from repro.bnn import build_model
+from repro.cachesvc import (
+    EvictionPolicy,
+    LocalDirBackend,
+    MemoryBackend,
+    SqliteBackend,
+    StoreBackend,
+    TieredBackend,
+    parse_backend,
+)
+from repro.cachesvc.backends import validate_key
+from repro.core.mapper import map_efficient_configuration
+from repro.core.profiler import ProfileTable
+from repro.store import ProfileStore
+
+from tests.fixtures import FakeClock
+
+BACKENDS = ("dir", "sqlite", "mem", "tiered")
+
+
+def make_backend(kind, tmp_path, *, policy=None, clock=time.time):
+    if kind == "dir":
+        return LocalDirBackend(tmp_path / "root", policy=policy,
+                               clock=clock)
+    if kind == "sqlite":
+        return SqliteBackend(tmp_path / "cache.db", policy=policy,
+                             clock=clock)
+    if kind == "mem":
+        return MemoryBackend(policy=policy, clock=clock)
+    if kind == "tiered":
+        return TieredBackend(
+            MemoryBackend(clock=clock),
+            SqliteBackend(tmp_path / "back.db", clock=clock),
+            policy=policy, clock=clock,
+        )
+    raise AssertionError(kind)
+
+
+# ---------------------------------------------------------------------------
+# shared contract: every backend behaves identically
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_contract_roundtrip_counters_and_peek(kind, tmp_path):
+    b = make_backend(kind, tmp_path)
+    assert b.get("a/x.json") is None
+    assert b.misses == 1 and b.hits == 0
+    b.put("a/x.json", '{"v": 1}')
+    assert b.puts == 1
+    assert b.get("a/x.json") == '{"v": 1}'
+    assert b.hits == 1
+    # peek is counter-silent: maintenance reads must not skew the
+    # popularity signal the prewarm worker ranks on
+    assert b.peek("a/x.json") == '{"v": 1}'
+    assert b.peek("a/missing.json") is None
+    assert b.hits == 1 and b.misses == 1
+    assert b.access_counts() == {"a/x.json": 1}
+    b.get("a/x.json")
+    assert b.access_counts() == {"a/x.json": 2}
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_contract_overwrite_etag_and_delete(kind, tmp_path):
+    b = make_backend(kind, tmp_path)
+    assert b.etag("k.json") is None
+    b.put("k.json", "one")
+    tag1 = b.etag("k.json")
+    assert tag1 and len(tag1) == 12
+    b.put("k.json", "one")
+    assert b.etag("k.json") == tag1          # content-addressed
+    b.put("k.json", "two")
+    assert b.etag("k.json") != tag1          # change detection
+    assert b.get("k.json") == "two"
+    assert b.delete("k.json") is True
+    assert b.delete("k.json") is False
+    assert b.deletes == 1
+    assert b.get("k.json") is None
+    assert b.access_counts() == {}           # forgotten with the entry
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_contract_list_is_prefix_filtered_and_sorted(kind, tmp_path):
+    b = make_backend(kind, tmp_path)
+    for k in ("v1/fp/b/m.json", "v1/fp/a/p.json", "v2/other.json"):
+        b.put(k, "{}")
+    assert b.list() == [
+        "v1/fp/a/p.json", "v1/fp/b/m.json", "v2/other.json",
+    ]
+    assert b.list("v1/fp/") == ["v1/fp/a/p.json", "v1/fp/b/m.json"]
+    assert b.list("nope/") == []
+
+
+@pytest.mark.parametrize("kind", BACKENDS)
+def test_contract_stats_shape(kind, tmp_path):
+    b = make_backend(kind, tmp_path)
+    b.put("x.json", "1")
+    s = b.stats()
+    for field in ("backend", "uri", "entries", "hits", "misses",
+                  "puts", "deletes", "evictions"):
+        assert field in s
+    assert s["entries"] == 1
+    assert s["uri"] == b.uri()
+
+
+@pytest.mark.parametrize("key", [
+    "/abs/path.json", "a/../b.json", "./x.json", "a\\b.json",
+    "bad\0key.json", "",
+])
+def test_hostile_keys_rejected_everywhere(key, tmp_path):
+    with pytest.raises(ValueError):
+        validate_key(key)
+    b = make_backend("dir", tmp_path)
+    for op in (b.get, b.peek, b.etag, b.delete):
+        with pytest.raises(ValueError):
+            op(key)
+    with pytest.raises(ValueError):
+        b.put(key, "x")
+
+
+# ---------------------------------------------------------------------------
+# eviction: LRU by access recency, TTL by write age
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ("dir", "sqlite", "mem"))
+def test_lru_eviction_keeps_recently_accessed(kind, tmp_path):
+    clock = FakeClock()
+    clock.t = time.time() + 3600.0   # ahead of any file mtime
+    b = make_backend(kind, tmp_path,
+                     policy=EvictionPolicy(max_entries=2), clock=clock)
+    b.put("a.json", "A")
+    clock.advance(1.0)
+    b.put("b.json", "B")
+    clock.advance(1.0)
+    assert b.get("a.json") == "A"    # freshen a: b is now the LRU
+    clock.advance(1.0)
+    b.put("c.json", "C")             # put sweeps -> evicts b
+    assert b.evictions == 1
+    assert b.list() == ["a.json", "c.json"]
+    assert b.get("b.json") is None
+
+
+@pytest.mark.parametrize("kind", ("sqlite", "mem"))
+def test_ttl_eviction_drops_stale_writes(kind, tmp_path):
+    clock = FakeClock()
+    b = make_backend(kind, tmp_path,
+                     policy=EvictionPolicy(ttl_s=50.0), clock=clock)
+    b.put("old.json", "O")
+    clock.advance(100.0)
+    b.put("new.json", "N")           # put sweeps -> old is past TTL
+    assert b.evictions == 1
+    assert b.list() == ["new.json"]
+
+
+def test_dir_ttl_uses_file_mtime(tmp_path):
+    b = make_backend("dir", tmp_path,
+                     policy=EvictionPolicy(ttl_s=50.0))
+    b.put("old.json", "O")
+    p = b.path_for("old.json")
+    stale = time.time() - 100.0
+    import os
+    os.utime(p, (stale, stale))      # backdate: written 100s ago
+    assert b.sweep() == 1
+    assert b.list() == []
+
+
+def test_eviction_policy_validates():
+    with pytest.raises(ValueError):
+        EvictionPolicy(max_entries=0)
+    with pytest.raises(ValueError):
+        EvictionPolicy(ttl_s=0.0)
+    p = EvictionPolicy()             # unbounded by default
+    assert p.max_entries is None and p.ttl_s is None
+
+
+# ---------------------------------------------------------------------------
+# backend-specific behavior
+# ---------------------------------------------------------------------------
+
+
+def test_dir_backend_atomic_files_and_prune(tmp_path):
+    b = make_backend("dir", tmp_path)
+    b.put("v1/deep/nested/x.json", "{}")
+    p = b.path_for("v1/deep/nested/x.json")
+    assert p.is_file() and p.read_text() == "{}"
+    assert not list(b.root.rglob("*.tmp"))   # atomic writes clean up
+    assert b.path_for("") == b.root
+    b.delete("v1/deep/nested/x.json")
+    b.prune_empty_dirs()
+    assert not (b.root / "v1").exists()
+
+
+def test_sqlite_two_handles_share_one_file(tmp_path):
+    db = tmp_path / "shared.db"
+    a = SqliteBackend(db)
+    b = SqliteBackend(db)
+    a.put("k.json", "from-a")
+    assert b.get("k.json") == "from-a"
+    b.put("k.json", "from-b")
+    assert a.get("k.json") == "from-b"
+    assert a.etag("k.json") == b.etag("k.json")
+
+
+def test_mem_registry_shares_by_name():
+    a = parse_backend("mem://contract-shared")
+    b = parse_backend("mem://contract-shared")
+    assert a is b
+    a.put("k.json", "x")
+    assert b.get("k.json") == "x"
+    # anonymous mem:// handles are always fresh and private
+    c = parse_backend("mem://")
+    d = parse_backend("mem://")
+    assert c is not d and c.get("k.json") is None
+
+
+def test_tiered_front_serves_after_back_loss(tmp_path):
+    front = MemoryBackend()
+    back = MemoryBackend()
+    t = TieredBackend(front, back)
+    back.put("k.json", "v")
+    assert t.get("k.json") == "v"            # read-through promotes
+    assert front.peek("k.json") == "v"
+    back.delete("k.json")
+    assert t.get("k.json") == "v"            # served from the front
+    t.put("w.json", "x")                     # write-through default
+    assert back.peek("w.json") == "x"
+    s = t.stats()
+    assert s["front"]["backend"] == "mem" and s["back"]["backend"] == "mem"
+
+
+def test_tiered_write_back_flush_and_etag_skip(tmp_path):
+    front, back = MemoryBackend(), MemoryBackend()
+    t = TieredBackend(front, back, write_back=True)
+    t.put("a.json", "1")
+    t.put("b.json", "2")
+    assert back.peek("a.json") is None       # journaled, not pushed
+    assert t.dirty() == ("a.json", "b.json")
+    assert t.flush() == 2
+    assert back.peek("a.json") == "1" and back.peek("b.json") == "2"
+    assert t.flush() == 0                    # nothing dirty
+    t.put("a.json", "1")                     # same bytes re-dirtied
+    assert t.flush() == 0                    # ETag-identical: skipped
+    t.put("a.json", "new")
+    assert t.flush() == 1
+    assert back.peek("a.json") == "new"
+
+
+# ---------------------------------------------------------------------------
+# URI resolution
+# ---------------------------------------------------------------------------
+
+
+def test_parse_backend_resolution(tmp_path):
+    assert isinstance(parse_backend(tmp_path), LocalDirBackend)
+    assert isinstance(parse_backend(str(tmp_path)), LocalDirBackend)
+    d = parse_backend(f"dir://{tmp_path}/sub")
+    assert isinstance(d, LocalDirBackend)
+    assert d.root == tmp_path / "sub"
+    s = parse_backend(f"sqlite://{tmp_path}/c.db")
+    assert isinstance(s, SqliteBackend)
+    m = parse_backend("mem://p9")
+    assert isinstance(m, MemoryBackend) and m.name == "p9"
+    b = MemoryBackend()
+    assert parse_backend(b) is b             # instance passthrough
+    with pytest.raises(ValueError):
+        parse_backend("sqlite://")
+    with pytest.raises(ValueError):
+        parse_backend("dir://")
+    with pytest.raises(ValueError):
+        parse_backend("redis://nope")
+    with pytest.raises(TypeError):
+        parse_backend(42)
+
+
+def test_backend_base_class_is_abstract(tmp_path):
+    b = StoreBackend()
+    with pytest.raises(NotImplementedError):
+        b.get("x.json")
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore over backends: bit-compatibility and sqlite round-trip
+# ---------------------------------------------------------------------------
+
+
+def _model_and_table():
+    m = build_model("fashion_mnist", scale=0.25)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in m.specs)
+    rng = np.random.default_rng(7)
+    from repro.core.parallel_config import CONFIGS, CPU
+
+    times, kernels, h2d, d2h = {}, {}, {}, {}
+    for b in (1, 4):
+        times[b], kernels[b], h2d[b], d2h[b] = [], [], [], []
+        for _ in labels:
+            krow = {c: float(rng.uniform(1e-6, 1e-3)) for c in CONFIGS}
+            up, down = (float(x) for x in rng.uniform(1e-6, 5e-4, 2))
+            kernels[b].append(krow)
+            times[b].append({
+                c: krow[c] if c == CPU else krow[c] + up + down
+                for c in CONFIGS
+            })
+            h2d[b].append(up)
+            d2h[b].append(down)
+    t = ProfileTable(m.name, (1, 4), labels, times,
+                     kernel_times=kernels, h2d_times=h2d,
+                     d2h_times=d2h)
+    return m, t
+
+
+def test_old_plain_directory_roots_load_unchanged(tmp_path):
+    """Bit-compatibility: a root grown before the backend layer (plain
+    Path construction, files on disk) must read identically through a
+    dir:// URI and an explicit LocalDirBackend handle."""
+    m, t = _model_and_table()
+    old = ProfileStore(tmp_path, fingerprint="fp-compat")
+    p = old.save_profile(t)
+    ec = map_efficient_configuration(t, policy="dp")
+    old.save_mapping(ec)
+    assert p.is_file()                       # real files, old layout
+
+    for spec in (tmp_path, f"dir://{tmp_path}",
+                 LocalDirBackend(tmp_path)):
+        store = ProfileStore(spec, fingerprint="fp-compat")
+        got = store.load_profile(m, (1, 4))
+        assert got is not None and got.times == t.times
+        cfg = store.load_mapping(m, policy="dp", batch=ec.proper_batch_size)
+        assert cfg is not None
+        assert cfg.layer_configs == ec.layer_configs
+
+
+def test_profile_store_round_trips_through_sqlite(tmp_path):
+    m, t = _model_and_table()
+    uri = f"sqlite://{tmp_path}/store.db"
+    a = ProfileStore(uri, fingerprint="fp-sql")
+    a.save_profile(t)
+    ec = map_efficient_configuration(t, policy="dp")
+    a.save_mapping(ec)
+
+    b = ProfileStore(uri, fingerprint="fp-sql")  # second handle
+    got = b.load_profile(m, (1, 4))
+    assert got is not None and got.times == t.times
+    cfg = b.load_mapping(m, policy="dp", batch=ec.proper_batch_size)
+    assert cfg is not None and cfg.layer_configs == ec.layer_configs
+    assert sorted(e.kind for e in b.entries()) == [
+        "efficient_configuration", "profile_table",
+    ]
+    # the whole store is one file: nothing else on disk
+    assert [p.name for p in tmp_path.iterdir()
+            if not p.name.startswith("store.db")] == []
+    stats = b.stats()
+    assert stats["backend"] == "sqlite" and stats["entries"] == 2
+
+
+def test_store_stats_counts_hits_and_misses(tmp_path):
+    m, t = _model_and_table()
+    store = ProfileStore("mem://", fingerprint="fp-stats")
+    assert store.load_profile(m, (1, 4)) is None
+    store.save_profile(t)
+    assert store.load_profile(m, (1, 4)) is not None
+    s = store.stats()
+    assert s["hits"] == 1 and s["misses"] >= 1 and s["puts"] == 1

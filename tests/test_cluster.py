@@ -40,6 +40,11 @@ class _FakeBatcher:
     def ready(self):
         return len(self.queue) >= self.max_batch
 
+    def migrate_to(self, other):
+        moving, self.queue = self.queue, []
+        other.queue.extend(moving)
+        return len(moving)
+
 
 class FakeEngine:
     """Duck-typed ServingEngine: queues requests, serves one batch per
@@ -304,8 +309,11 @@ def test_scale_decision_during_drain_defers():
                  "max_hosts": 4},
     )
     victim = cluster.hosts[0]
-    victim.submit(victim.tenant_names()[0], 0)   # in-flight work
+    name = victim.tenant_names()[0]
     cluster.start_drain(victim)
+    # plant work the drain hand-off cannot move (already dispatched to
+    # the engine after the queue migration ran)
+    victim.router.tenant(name).engine.submit(0)
     n_before = len(cluster.hosts)
     surge(cluster, tenants)
     # manually tick the controller against a hot pool while the
@@ -405,12 +413,19 @@ def test_draining_host_finishes_inflight_bit_exact(real_pair):
     moved = cluster.start_drain(victim)
     assert victim.status == DRAINING
     assert m.name in moved              # sole replica was replicated
-    served = victim.drain()
-    assert served == {m.name: 8}
+    # the queued (never-dispatched) backlog migrated to the replica —
+    # the victim has nothing left to serve and retires immediately
+    assert victim.pending() == 0
+    assert victim.drain() == {}
     victim.retire()
     assert victim.status == RETIRED
-    # every in-flight request completed on the draining host with
-    # the reference forward's exact bits
+    replica = cluster._hosts_for(m.name)[0]
+    assert replica.pending() == 8
+    served = cluster.drain()
+    assert served == {m.name: 8}
+    # every migrated request completed on the replica with the
+    # reference forward's exact bits — the same Request objects the
+    # caller holds, FIFO order preserved across the migration
     for i, r in enumerate(reqs):
         assert r.done_t is not None
         np.testing.assert_array_equal(np.asarray(r.result), ref[i])
@@ -419,6 +434,35 @@ def test_draining_host_finishes_inflight_bit_exact(real_pair):
     assert cluster.pending() == 1
     cluster.drain()
     np.testing.assert_array_equal(np.asarray(r.result), ref[0])
+
+
+def test_drain_handoff_migrates_queued_keeps_dispatched(real_pair):
+    """The PR 8 residual, both halves: queued requests move to the
+    replica at drain time; work already dispatched to an engine stays
+    and finishes on the draining host."""
+    m, packed, xw, ref = real_pair
+    from tests.fixtures import flat_table
+
+    table = flat_table(m)
+    config = price_mapping(
+        table, 4, [CPU] * len(table.layer_labels)
+    )
+    tp = TenantPlan(name=m.name, model=m, packed=packed,
+                    table=table, config=config)
+    cluster = Cluster([tp], n_hosts=2, batch_sizes=(4,))
+    victim = cluster.hosts[cluster.plan.host_of(m.name)]
+    queued = [victim.submit(m.name, xw[i]) for i in range(4)]
+    cluster.start_drain(victim)
+    # planted after the hand-off ran: this models a batch the engine
+    # had already popped — migration must not touch it
+    stuck = victim.router.tenant(m.name).engine.submit(xw[4])
+    assert victim.pending() == 1
+    assert victim.drain() == {m.name: 1}
+    victim.retire()
+    np.testing.assert_array_equal(np.asarray(stuck.result), ref[4])
+    cluster.drain()
+    for i, r in enumerate(queued):
+        np.testing.assert_array_equal(np.asarray(r.result), ref[i])
 
 
 # ---------------------------------------------------------------------------

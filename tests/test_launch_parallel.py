@@ -1,0 +1,227 @@
+"""Launch/parallel dry-run paths: shape-cell gating, size-adaptive
+sharding schemes, batch-axis selection, roofline attribution, and
+real NamedSharding construction on a debug mesh — everything that can
+run with one CPU device and ShapeDtypeStruct stand-ins (no compile,
+no 512-device subprocess).
+"""
+
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import jax  # must initialize before repro.launch.dryrun sets XLA_FLAGS
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.launch.dryrun import roofline_terms, run_cell
+from repro.launch.mesh import make_debug_mesh
+from repro.models.transformer import param_specs
+from repro.parallel.sharding import (
+    ShardScheme,
+    batch_axes,
+    default_scheme,
+    make_batch_shardings,
+    make_cache_shardings,
+    make_opt_shardings,
+    make_param_shardings,
+)
+
+
+def fake_mesh(**axis_sizes):
+    """axis_names + devices.shape is all the pure helpers consult."""
+    return SimpleNamespace(
+        axis_names=tuple(axis_sizes),
+        devices=np.zeros(tuple(axis_sizes.values())),
+    )
+
+
+# ---------------------------------------------------------------------------
+# configs registry and shape cells
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_normalizes_and_rejects():
+    assert C.canonical("qwen2.5-14b") == "qwen2_5_14b"
+    assert C.canonical("olmo_1b") == "olmo_1b"
+    with pytest.raises(KeyError):
+        C.canonical("gpt-17")
+
+
+def test_cell_supported_gates_long_context():
+    assert C.cell_supported(C.get("mamba2_130m"), "long_500k")
+    assert not C.cell_supported(C.get("olmo_1b"), "long_500k")
+    assert C.cell_supported(C.get("olmo_1b"), "train_4k")
+
+
+def test_run_cell_skips_unsupported_cell_before_any_mesh():
+    """A full-attention arch on the 500k cell is skipped by design —
+    and the skip path must trigger before mesh construction, so it
+    runs on a 1-device host."""
+    r = run_cell("olmo_1b", "long_500k", multi_pod=False)
+    assert r["status"] == "skipped"
+    assert r["arch"] == "olmo_1b" and r["shape"] == "long_500k"
+    assert "sub-quadratic" in r["reason"]
+
+
+def test_input_specs_allocate_nothing():
+    cfg = C.get_smoke("olmo_1b")
+    specs = C.input_specs(cfg, "train_4k")
+    assert set(specs) == {"tokens", "labels"}
+    assert all(isinstance(v, jax.ShapeDtypeStruct) for v in specs.values())
+    assert specs["tokens"].shape == (256, 4096)
+    decode = C.input_specs(cfg, "decode_32k")
+    assert decode["token"].shape == (128, 1)
+    assert isinstance(decode["cache"], dict)
+
+
+# ---------------------------------------------------------------------------
+# scheme selection and batch-axis choice (pure helpers, fake meshes)
+# ---------------------------------------------------------------------------
+
+
+def test_default_scheme_is_size_adaptive():
+    small = default_scheme(C.get("olmo_1b"))          # ~1B
+    assert small.tp is False and small.fsdp == "zero1"
+    assert small.batch_over_model is True
+    mid = default_scheme(C.get("qwen2_5_14b"))        # ~14B
+    assert mid.tp is True and mid.fsdp == "zero1"
+    big = default_scheme(C.get("grok_1_314b"))        # ~314B
+    assert big.tp is True and big.fsdp == "zero3"
+
+
+def test_batch_axes_prefers_largest_dividing_subset():
+    mesh = fake_mesh(data=16, model=16)
+    plain = ShardScheme(batch_over_model=False)
+    folded = ShardScheme(batch_over_model=True)
+    assert batch_axes(mesh, plain, 256) == ("data",)
+    assert batch_axes(mesh, folded, 256) == ("data", "model")
+    # batch indivisible by every candidate: replicate, never crash
+    assert batch_axes(mesh, plain, 3) == ()
+    assert batch_axes(mesh, folded, 3) == ()
+
+
+def test_batch_axes_multi_pod_engages_model_before_idling_it():
+    mesh = fake_mesh(pod=2, data=16, model=16)
+    folded = ShardScheme(batch_over_model=True)
+    # 512 divides pod*data*model
+    assert batch_axes(mesh, folded, 512) == ("pod", "data", "model")
+    # 256 cannot span all 512 chips; ('data','model') beats ('pod','data')
+    assert batch_axes(mesh, folded, 256) == ("data", "model")
+    plain = ShardScheme(batch_over_model=False)
+    assert batch_axes(mesh, plain, 32) == ("pod", "data")
+
+
+def test_resolve_expert_mode():
+    moe = C.get("deepseek_moe_16b")
+    assert moe.moe is not None
+    if moe.moe.n_experts % 16 == 0:
+        assert ShardScheme().resolve_expert_mode(moe, 16) == "ep"
+    assert ShardScheme().resolve_expert_mode(moe, 7) == (
+        "ep" if moe.moe.n_experts % 7 == 0 else "tp"
+    )
+    assert ShardScheme(expert_mode="tp").resolve_expert_mode(moe, 16) == "tp"
+    dense = C.get("olmo_1b")
+    assert ShardScheme().resolve_expert_mode(dense, 16) == "tp"
+
+
+# ---------------------------------------------------------------------------
+# real shardings on a debug mesh (1x1 — always divisible, 1 device)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def debug_mesh():
+    return make_debug_mesh((1, 1))
+
+
+def test_param_shardings_cover_the_tree(debug_mesh):
+    cfg = C.get_smoke("olmo_1b")
+    tree = param_specs(cfg)
+    sh = make_param_shardings(cfg, debug_mesh, tree)
+    leaves = jax.tree.leaves(sh)
+    assert leaves and all(isinstance(s, NamedSharding) for s in leaves)
+    # same tree structure as the params
+    assert jax.tree.structure(sh) == jax.tree.structure(tree)
+
+
+def test_opt_shardings_zero1_and_unknown_kind(debug_mesh):
+    cfg = C.get_smoke("olmo_1b")
+    tree = param_specs(cfg)
+    opt = make_opt_shardings(cfg, debug_mesh, tree, kind="adamw")
+    assert isinstance(opt.step, NamedSharding)
+    assert opt.step.spec == P()              # scalars replicated
+    assert set(opt.inner) == {"m", "v"}
+    sgd = make_opt_shardings(cfg, debug_mesh, tree, kind="sgd")
+    assert jax.tree.structure(sgd.inner) == jax.tree.structure(tree)
+    with pytest.raises(ValueError):
+        make_opt_shardings(cfg, debug_mesh, tree, kind="adafactor")
+
+
+def test_batch_shardings_for_every_cell_kind(debug_mesh):
+    cfg = C.get_smoke("olmo_1b")
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        specs = C.input_specs(cfg, shape)
+        sh = make_batch_shardings(cfg, debug_mesh, specs)
+        assert set(sh) == set(specs)
+        for k, v in sh.items():
+            if k == "cache":
+                assert all(
+                    isinstance(s, NamedSharding) for s in v.values()
+                )
+            else:
+                assert isinstance(v, NamedSharding)
+
+
+def test_cache_shardings_replicate_len(debug_mesh):
+    cfg = C.get_smoke("olmo_1b")
+    cache = C.input_specs(cfg, "decode_32k")["cache"]
+    sh = make_cache_shardings(cfg, debug_mesh, cache)
+    assert set(sh) == set(cache)
+    assert sh["len"].spec == P()
+    for k in ("k", "v"):
+        assert isinstance(sh[k], NamedSharding)
+
+
+def test_decode_replicate_batch_pins_token_replicated(debug_mesh):
+    cfg = C.get_smoke("olmo_1b")
+    specs = C.input_specs(cfg, "decode_32k")
+    scheme = ShardScheme(decode_replicate_batch=True)
+    sh = make_batch_shardings(cfg, debug_mesh, specs, scheme)
+    assert sh["token"].spec == P()
+
+
+# ---------------------------------------------------------------------------
+# roofline attribution (pure arithmetic over a recorded result)
+# ---------------------------------------------------------------------------
+
+
+def _fake_result(*, flops, bytes_, coll, devices=256):
+    return {
+        "devices": devices,
+        "collectives": {"per_device_bytes": coll},
+        "per_device": {"hlo_flops": flops, "hlo_bytes": bytes_},
+    }
+
+
+def test_roofline_terms_pick_the_dominant_resource():
+    cfg = C.get("olmo_1b")
+    compute_bound = roofline_terms(
+        _fake_result(flops=1e15, bytes_=1e9, coll=1e9), cfg, "train_4k"
+    )
+    assert compute_bound["dominant"] == "compute"
+    coll_bound = roofline_terms(
+        _fake_result(flops=1e12, bytes_=1e9, coll=1e12), cfg, "train_4k"
+    )
+    assert coll_bound["dominant"] == "collective"
+    # useful_ratio compares model flops to total HLO flops
+    sh = C.SHAPES["train_4k"]
+    expect = 2 * 3 * cfg.n_active_params() * sh.batch * sh.seq
+    assert compute_bound["model_flops"] == expect
+    assert compute_bound["useful_ratio"] == pytest.approx(
+        expect / (1e15 * 256)
+    )
+    zero = roofline_terms(
+        _fake_result(flops=0.0, bytes_=0.0, coll=0.0), cfg, "decode_32k"
+    )
+    assert zero["useful_ratio"] == 0.0

@@ -1,11 +1,17 @@
 #!/usr/bin/env python3
 """Operate on a ProfileStore from the command line.
 
-    python tools/profile_store.py inspect [--root DIR]
+    python tools/profile_store.py inspect [--root DIR | --store URI]
+    python tools/profile_store.py stats   [--root DIR | --store URI]
     python tools/profile_store.py gc      [--root DIR] [--max-age-days D]
                                           [--dry-run | --yes]
     python tools/profile_store.py export  [--root DIR] [--out FILE]
     python tools/profile_store.py fit     [--root DIR] [--out FILE]
+
+Every subcommand accepts ``--store URI`` to operate on any cache
+backend (``dir://path``, ``sqlite://file.db``, ``mem://name`` — see
+``repro.cachesvc``) instead of the default local directory; ``--root``
+remains the spelling for plain directory stores.
 
 ``inspect`` lists every artifact with its key (fingerprint, model,
 registry hash), schema, age, size and — for mappings — whether the
@@ -18,6 +24,9 @@ entries apart at a glance.  ``gc`` removes artifacts from
 older store schemas plus, with ``--max-age-days``, anything older than
 that; it previews by default and deletes only with ``--yes``.
 ``export`` writes the whole store as one self-contained JSON bundle.
+``stats`` prints the backend's counters — entries by kind plus the
+hit/miss/put/eviction totals the cache service's popularity ranking
+feeds on.
 ``fit`` trains the learned latency predictor
 (``repro.estimator.LatencyPredictor``) on the training rows the store
 has accumulated from real profile runs, prints its per-group coverage,
@@ -38,12 +47,13 @@ from pathlib import Path
 DEFAULT_ROOT = Path("results/profile_store")
 
 
-def _store(root: Path):
+def _store(args):
     # deferred: repro.store pulls in jax via the core modules
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
     from repro.store import ProfileStore
 
-    return ProfileStore(root)
+    spec = args.store if getattr(args, "store", None) else args.root
+    return ProfileStore(spec)
 
 
 def _fmt_age(age_s: float) -> str:
@@ -90,7 +100,7 @@ def _fused_note(e) -> str:
 
 
 def cmd_inspect(args) -> int:
-    store = _store(args.root)
+    store = _store(args)
     entries = store.entries()
     for e in entries:
         key = e.key
@@ -102,14 +112,35 @@ def cmd_inspect(args) -> int:
             f"model={key.get('model_name', key.get('model', '?'))}  "
             f"r={key.get('registry', '?')}  "
             + (f"{note}  " if note else "")
-            + f"{e.path.relative_to(args.root)}"
+            + (e.store_key or str(e.path))
         )
-    print(f"{len(entries)} entries under {args.root}")
+    print(f"{len(entries)} entries under {store.backend.uri()}")
+    return 0
+
+
+def cmd_stats(args) -> int:
+    store = _store(args)
+    s = store.stats()
+    by_kind: dict = {}
+    for e in store.entries():
+        by_kind[e.kind] = by_kind.get(e.kind, 0) + 1
+    print(f"backend   {s.get('backend', '?')}  {s.get('uri', '')}")
+    print(f"entries   {s.get('entries', 0)}")
+    for kind in sorted(by_kind):
+        print(f"  {kind:26s} {by_kind[kind]:>6d}")
+    for counter in ("hits", "misses", "puts", "deletes", "evictions"):
+        print(f"{counter:9s} {s.get(counter, 0)}")
+    for tier in ("front", "back"):
+        if tier in s:
+            ts = s[tier]
+            print(f"{tier:9s} {ts.get('uri', '')}  "
+                  f"hits={ts.get('hits', 0)} misses={ts.get('misses', 0)} "
+                  f"entries={ts.get('entries', 0)}")
     return 0
 
 
 def cmd_gc(args) -> int:
-    store = _store(args.root)
+    store = _store(args)
     max_age_s = (
         None if args.max_age_days is None
         else args.max_age_days * 86400.0
@@ -125,7 +156,7 @@ def cmd_gc(args) -> int:
 
 
 def cmd_export(args) -> int:
-    store = _store(args.root)
+    store = _store(args)
     bundle = store.export()
     text = json.dumps(bundle, indent=2) + "\n"
     if args.out is None:
@@ -137,7 +168,7 @@ def cmd_export(args) -> int:
 
 
 def cmd_fit(args) -> int:
-    store = _store(args.root)
+    store = _store(args)
     rows = store.load_training_rows()
     if not rows:
         print(f"no training rows under {args.root}; profile something "
@@ -162,6 +193,9 @@ def main(argv=None) -> int:
         p = sub.add_parser(name, help=help_)
         p.add_argument("--root", type=Path, default=DEFAULT_ROOT,
                        help=f"store root (default: {DEFAULT_ROOT})")
+        p.add_argument("--store", default=None, metavar="URI",
+                       help="backend URI (dir:// sqlite:// mem://); "
+                            "overrides --root")
         return p
 
     add("inspect", "list every stored artifact")
@@ -180,10 +214,11 @@ def main(argv=None) -> int:
     fit = add("fit", "train the latency predictor on stored rows")
     fit.add_argument("--out", type=Path, default=None,
                      help="write the fitted predictor JSON here")
+    add("stats", "print backend counters and entry totals")
     args = ap.parse_args(argv)
     return {
         "inspect": cmd_inspect, "gc": cmd_gc, "export": cmd_export,
-        "fit": cmd_fit,
+        "fit": cmd_fit, "stats": cmd_stats,
     }[args.cmd](args)
 
 
