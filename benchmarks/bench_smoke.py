@@ -1,9 +1,10 @@
 """CI bench-smoke: tiny-size benchmark run + regression gate.
 
 Runs ``kernel_bench``, ``segment_bench``, ``serve_bench``,
-``adapt_bench``, ``fleet_bench``, ``cluster_bench`` and
-``cachesvc_bench`` at CI-sized settings (model ``scale=0.25``, batches
-``(1, 4)``, one timing repeat), writes the results as JSON (the
+``adapt_bench``, ``fleet_bench``, ``cluster_bench``,
+``cachesvc_bench`` and ``elastic_bench`` at CI-sized settings (model
+``scale=0.25``, batches ``(1, 4)``, one timing repeat), writes the
+results as JSON (the
 ``BENCH_pr.json`` artifact the CI job uploads), and — with
 ``--check`` — fails when any metric regressed by more than the
 tolerance against a committed baseline (``benchmarks/baseline.json``).
@@ -22,7 +23,11 @@ warm-start hit rate (zero re-profiling on the serving path) and that
 the background explore loop recovers the ground-truth mapping from a
 planted-stale profile.  ``segment_bench`` asserts
 every applicable fused segment-scope variant bit-exact against the
-per-layer launch.  Their ``us=0`` sentinel rows are coverage-gated
+per-layer launch.  ``elastic_bench`` asserts the elastic subnet tier:
+bit-exact outputs at every width level, the quality controller
+halving (at least) the surge shed of a fixed-width baseline, full
+width recovered and journaled after the surge, and the quality floor
+never violated.  Their ``us=0`` sentinel rows are coverage-gated
 (missing from a PR run fails) but not timing-gated.
 
 Gate semantics:
@@ -106,14 +111,24 @@ SMOKE_KWARGS = {
         "repeats": 1,
         "profile_repeats": 1,
     },
+    # full width is required: conv channels only narrow when the base
+    # is wider than the 32-lane pack-width clamp
+    "elastic_bench": {
+        "scale": 1.0,
+        "batch": 4,
+        "repeats": 1,
+        "profile_repeats": 1,
+        "surge_rounds": 10,
+        "calm_rounds": 8,
+    },
 }
 
 
 def collect() -> dict:
     """{metric_name: {"us": float, "derived": str}} over the suites."""
     from benchmarks import (
-        adapt_bench, cachesvc_bench, cluster_bench, fleet_bench,
-        kernel_bench, segment_bench, serve_bench,
+        adapt_bench, cachesvc_bench, cluster_bench, elastic_bench,
+        fleet_bench, kernel_bench, segment_bench, serve_bench,
     )
 
     metrics: dict = {}
@@ -125,6 +140,7 @@ def collect() -> dict:
         ("fleet_bench", fleet_bench.run),
         ("cluster_bench", cluster_bench.run),
         ("cachesvc_bench", cachesvc_bench.run),
+        ("elastic_bench", elastic_bench.run),
     ):
         for rname, us, derived in fn(**SMOKE_KWARGS[name]):
             metrics[rname] = {"us": round(float(us), 3), "derived": derived}

@@ -1,0 +1,228 @@
+"""Elastic serving benchmark: SLO-driven width degradation vs
+shedding under a synthetic admission surge (``repro.elastic``).
+
+One fashion-MNIST BNN is turned into a nested-width subnet family
+(fractions ``(1.0, 0.5, 0.25)`` — every narrower level a prefix view
+of the base packed tensors, no weight copies), each level is planned
+through the ordinary profile→map chain, and the same surge traffic is
+pushed through two routers:
+
+* **baseline** — a fixed-width ``ServingEngine`` behind a
+  ``FleetRouter`` with a per-request deadline: admission control
+  (backlog × profiled step estimate vs deadline) sheds everything the
+  full-width step cannot absorb;
+* **elastic** — an ``ElasticEngine`` behind the same router with a
+  ``QualityController`` attached: sustained shed pressure hot-swaps
+  the tenant one level narrower at a batch boundary, the narrower
+  step admits more of the surge, and calm traffic restores full
+  width under hysteresis.
+
+Both phases run the admission math on *profiled* expected step times
+(``live_min_samples`` is set unreachably high), so the shed counts are
+deterministic functions of the planned configurations, not of this
+container's wall clock — the measured quantity is the mechanism.
+
+Hard assertions:
+
+* every level's served outputs are **bit-exact** against that level's
+  own packed reference forward (checked pinned per level *and* live
+  on every surge/calm response, at whatever level the controller had
+  selected when the round was admitted);
+* the elastic run sheds **at most half** of what the fixed-width
+  baseline sheds over the same surge (``shed_elastic <= 0.5 *
+  shed_baseline``);
+* full width is **recovered** after the surge (level back to 0 within
+  the calm rounds) and both the degrade and the restore transitions
+  are journaled ``QualityRecord``\\ s;
+* the ``quality_floor`` is never violated: no observed level and no
+  journaled transition ever exceeds it.
+
+The row is functional (``us=0`` sentinel): shed ratios and the
+transition trace ride in ``derived``; the asserts are the gate.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+from repro.bnn import build_model
+from repro.bnn.models import forward_packed, pack_params, prepare_input_packed
+from repro.elastic import ElasticEngine, ElasticSpec, SubnetFamily, plan_family
+from repro.fleet import FleetRouter, QualityController
+from repro.serving import ServingEngine
+
+# admission must run on the profiled estimate for the whole bench:
+# live telemetry would make shed counts container-noise-dependent
+NEVER_LIVE = 10**9
+
+
+def _router(engine, *, deadline_s, quality=None) -> FleetRouter:
+    router = FleetRouter(quality=quality)
+    router.add_tenant(
+        "fm", engine, deadline_s=deadline_s,
+        live_min_samples=NEVER_LIVE,
+    )
+    return router
+
+
+def _run_phase(
+    router, traffic, refs, *, surge_rounds, surge_per_round,
+    calm_rounds, batch,
+):
+    """Drive surge then calm rounds; returns (shed_surge, levels_seen).
+
+    Every completed response is asserted bit-exact against the
+    reference outputs of the level that was serving when its round was
+    admitted (level 0 for a plain engine)."""
+    tenant = router.tenant("fm")
+    engine = tenant.engine
+    shed_at_surge_end = 0
+    levels_seen = []
+    for rnd in range(surge_rounds + calm_rounds):
+        surge = rnd < surge_rounds
+        n = surge_per_round * batch if surge else batch
+        level = getattr(engine, "level", 0)
+        levels_seen.append(level)
+        reqs = [r for r in (router.submit("fm", x) for x in traffic[:n])
+                if r is not None]
+        router.step(force=True)
+        for j, r in enumerate(reqs):
+            out = r.wait(timeout=30.0)
+            assert np.array_equal(out, refs[level][j % batch]), (
+                f"round {rnd}: response {j} at level {level} is not "
+                "bit-exact against that level's reference"
+            )
+        if surge:
+            shed_at_surge_end = tenant.rejected
+    return shed_at_surge_end, levels_seen
+
+
+def run(
+    scale: float = 1.0,
+    batch: int = 4,
+    repeats: int = 1,
+    profile_repeats: int = 1,
+    fractions=(1.0, 0.5, 0.25),
+    quality_floor: int = 2,
+    slack: float = 3.5,
+    surge_rounds: int = 10,
+    surge_per_round: int = 6,
+    calm_rounds: int = 8,
+    degrade_after: int = 2,
+    restore_after: int = 3,
+):
+    del repeats  # the shed comparison is one deterministic co-run
+    m = build_model("fashion_mnist", scale=scale)
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    family = SubnetFamily.build(m, packed, ElasticSpec(fractions=fractions))
+    plan = plan_family(
+        family, batch_sizes=(batch,), repeats=profile_repeats, policy="dp"
+    )
+
+    est = [c.expected_time_per_example * batch for c in plan.configs]
+    assert est[1] < est[0], (
+        f"narrow level is not cheaper than full width ({est[1]:.2e}s vs "
+        f"{est[0]:.2e}s); width degradation cannot absorb a surge here"
+    )
+    deadline_s = slack * est[0]
+
+    # one fixed input batch; per-level packed reference outputs
+    x01 = jax.random.uniform(
+        jax.random.PRNGKey(7), (batch, *m.input_hw, m.in_channels)
+    )
+    xw = np.asarray(prepare_input_packed(x01))
+    traffic = [xw[j % batch] for j in range(surge_per_round * batch)]
+    refs = [
+        np.asarray(forward_packed(lvl.model.specs, lvl.packed, xw))
+        for lvl in family
+    ]
+
+    engine_kwargs = dict(allowed_batch_sizes=(batch,), max_wait_s=0.0)
+
+    # -- pinned bit-exactness gate: every level vs its own reference --
+    pinned = ElasticEngine(plan, **engine_kwargs)
+    pinned.warm()
+    for k in range(pinned.n_levels):
+        assert pinned.set_level(k)
+        reqs = [pinned.submit(x) for x in traffic[:batch]]
+        pinned.step(force=True)
+        for j, r in enumerate(reqs):
+            assert np.array_equal(r.wait(timeout=30.0), refs[k][j]), (
+                f"pinned level {k}: response {j} is not bit-exact"
+            )
+    assert pinned.set_level(0)
+
+    # -- baseline: fixed full width, deadline sheds the surge ---------
+    base_router = _router(
+        ServingEngine(m, packed, plan.configs[0], **engine_kwargs),
+        deadline_s=deadline_s,
+    )
+    shed_baseline, _ = _run_phase(
+        base_router, traffic, refs, surge_rounds=surge_rounds,
+        surge_per_round=surge_per_round, calm_rounds=calm_rounds,
+        batch=batch,
+    )
+    assert shed_baseline > 0, (
+        "the surge never tripped admission control at full width; "
+        "raise surge_per_round or tighten slack"
+    )
+
+    # -- elastic: same traffic, quality controller attached -----------
+    engine = ElasticEngine(
+        plan, quality_floor=quality_floor, **engine_kwargs
+    )
+    engine.warm()
+    quality = QualityController(
+        degrade_after=degrade_after, restore_after=restore_after
+    )
+    router = _router(engine, deadline_s=deadline_s, quality=quality)
+    shed_elastic, levels_seen = _run_phase(
+        router, traffic, refs, surge_rounds=surge_rounds,
+        surge_per_round=surge_per_round, calm_rounds=calm_rounds,
+        batch=batch,
+    )
+
+    assert shed_elastic <= 0.5 * shed_baseline, (
+        f"elastic shed {shed_elastic} requests vs baseline "
+        f"{shed_baseline}; width degradation absorbed less than half "
+        "the surge"
+    )
+    actions = [r.action for r in quality.journal]
+    assert "degrade" in actions, "surge never triggered a degrade"
+    assert "restore" in actions, "calm rounds never restored width"
+    assert engine.level == 0, (
+        f"full width not recovered after the surge (level "
+        f"{engine.level} after {calm_rounds} calm rounds)"
+    )
+    assert max(levels_seen) <= quality_floor and all(
+        r.to_level <= quality_floor for r in quality.journal
+    ), "quality_floor violated"
+    assert engine.level_switches >= 2 and engine.degraded_share > 0.0
+
+    stats = router.stats()["fm"]
+    trace = ">".join(
+        f"{r.action[0].upper()}{r.to_level}" for r in quality.journal
+    )
+    return [(
+        f"elastic/fashion_mnist/b{batch}/surge_shed",
+        0.0,
+        f"shed_ratio={shed_elastic / shed_baseline:.2f};"
+        f"shed_elastic={shed_elastic};shed_baseline={shed_baseline};"
+        f"levels={len(plan)};floor={quality_floor};"
+        f"deadline_ms={deadline_s * 1e3:.2f};"
+        f"est_ratio_l1={est[1] / est[0]:.2f};"
+        f"deepest_level={max(levels_seen)};"
+        f"switches={engine.level_switches};"
+        f"degraded_share={stats['degraded_share']:.2f};"
+        f"admitted={stats['admitted']};journal={trace};"
+        f"surge_rounds={surge_rounds}x{surge_per_round}b;"
+        f"calm_rounds={calm_rounds}",
+    )]
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

@@ -30,6 +30,10 @@ Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
                         (repro.cachesvc) — warm-start hit rate through
                         a shared backend, background explore loop
                         recovering a planted-stale mapping
+  elastic_bench      -> beyond-paper: elastic nested-width subnets
+                        (repro.elastic) — SLO-driven width degradation
+                        vs fixed-width shedding under surge, bit-exact
+                        per level, journaled degrade/restore
   estimator_bench    -> beyond-paper: learned latency estimator
                         (repro.estimator) — predictor-seeded DP on an
                         unprofiled model (zero profiling passes) vs
@@ -50,8 +54,9 @@ import time
 def main() -> None:
     from benchmarks import (
         adapt_bench, batch_sweep, cachesvc_bench, cluster_bench,
-        efficient_configs, estimator_bench, fleet_bench, kernel_bench,
-        profile_layers, roofline, segment_bench, serve_bench,
+        efficient_configs, elastic_bench, estimator_bench, fleet_bench,
+        kernel_bench, profile_layers, roofline, segment_bench,
+        serve_bench,
     )
 
     from benchmarks.bench_smoke import SMOKE_KWARGS
@@ -84,6 +89,8 @@ def main() -> None:
          SMOKE_KWARGS["cluster_bench"] if quick else {}),
         ("cachesvc_bench", cachesvc_bench.run,
          SMOKE_KWARGS["cachesvc_bench"] if quick else {}),
+        ("elastic_bench", elastic_bench.run,
+         SMOKE_KWARGS["elastic_bench"] if quick else {}),
         # not in bench_smoke: the gates inside the suite are the gate
         ("estimator_bench", estimator_bench.run,
          {"train_scales": (0.25, 0.375), "target_scale": 0.5}

@@ -93,7 +93,14 @@ map_model = map_efficient_configuration
 
 @dataclasses.dataclass
 class TenantPlan:
-    """One planned tenant: everything needed to build its engine."""
+    """One planned tenant: everything needed to build its engine.
+
+    ``elastic`` (an :class:`~repro.elastic.ElasticPlan`, set by
+    ``Deployment.plan(elastic=...)``) carries the tenant's planned
+    nested-width subnet levels; its level 0 is this plan.
+    ``quality_floor`` is the deepest subnet level the tenant may be
+    degraded to (``None`` = the narrowest planned level; 0 pins full
+    width)."""
 
     name: str
     model: object
@@ -103,6 +110,8 @@ class TenantPlan:
     weight: float = 1.0
     priority: int = 0
     deadline_s: float = math.inf
+    elastic: object = None
+    quality_floor: int | None = None
 
     @property
     def expected_s_per_example(self) -> float:
@@ -275,6 +284,31 @@ def _as_model_dict(models) -> dict:
     return {name: (model, packed)}
 
 
+def _as_elastic_specs(elastic, names) -> dict:
+    """Normalize ``plan()``'s `elastic` argument to {name:
+    ElasticSpec}: ``None`` (no elastic tenants), one spec or fractions
+    tuple (applied to every tenant), or a per-tenant dict of either."""
+    if elastic is None:
+        return {}
+    from repro.elastic import ElasticSpec
+
+    def as_spec(v):
+        if isinstance(v, ElasticSpec):
+            return v
+        return ElasticSpec(fractions=tuple(v))
+
+    if isinstance(elastic, dict):
+        unknown = set(elastic) - set(names)
+        if unknown:
+            raise ValueError(
+                f"elastic names {sorted(unknown)} match no tenant in "
+                f"{sorted(names)}"
+            )
+        return {n: as_spec(v) for n, v in elastic.items()}
+    spec = as_spec(elastic)
+    return {n: spec for n in names}
+
+
 class Deployment:
     """A planned (and, after :meth:`serve`, running) deployment —
     the one object the examples, benchmarks and cluster tier hold.
@@ -319,6 +353,9 @@ class Deployment:
         priorities: dict | None = None,
         deadlines: dict | None = None,
         routing: str = "least_loaded",
+        elastic=None,
+        quality_floors: dict | None = None,
+        estimate_levels: bool = False,
     ) -> "Deployment":
         """Plan `models` onto `hosts` simulated serving hosts.
 
@@ -327,7 +364,19 @@ class Deployment:
         ``hosts > 1`` → the cluster placement scheduler assigns
         tenants to hosts and each host plans its own fleet (the
         per-host mapping happens at :meth:`serve`, against the actual
-        co-residents placement chose)."""
+        co-residents placement chose).
+
+        ``elastic`` declares nested-width subnet families
+        (``repro.elastic``): an ``ElasticSpec``, a fractions tuple
+        like ``(1.0, 0.5, 0.25)``, or a per-tenant dict of either.
+        Elastic tenants get every level planned (level-tagged store
+        keys; level 0 is the tenant's own plan) and serve through an
+        ``ElasticEngine``.  ``quality_floors`` is ``{name: deepest
+        permitted level}``; ``estimate_levels=True`` prices narrow
+        levels through the store's persisted latency predictor when
+        one exists (zero extra profiling sweeps).  Note the distinct
+        ``serve(elastic=...)`` knob, which configures the cluster
+        host-pool controller."""
         if hosts < 1:
             raise ValueError("hosts must be >= 1")
         store = _as_store(store)
@@ -377,6 +426,23 @@ class Deployment:
             tp.weight = float((weights or {}).get(name, tp.weight))
             tp.priority = int((priorities or {}).get(name, 0))
             tp.deadline_s = float((deadlines or {}).get(name, math.inf))
+        elastic_specs = _as_elastic_specs(elastic, tuple(tenants))
+        for name, spec in elastic_specs.items():
+            from repro.elastic import SubnetFamily, plan_family
+
+            tp = tenants[name]
+            family = SubnetFamily.build(tp.model, tp.packed, spec)
+            # base=tp: level 0 reuses this tenant's (solo or joint)
+            # plan verbatim; narrow levels are planned under their
+            # #L{k}-tagged store keys
+            tp.elastic = plan_family(
+                family, base=tp, store=store, policy=policy,
+                configs=configs, autotune=autotune, repeats=repeats,
+                time_source=time_source, registry=registry,
+                estimate=estimate_levels,
+            )
+            if quality_floors and name in quality_floors:
+                tp.quality_floor = int(quality_floors[name])
         return cls(
             tenants=tenants, fleet_plan=fleet_plan, hosts=hosts,
             store=store, policy=policy, configs=configs, gamma=gamma,
@@ -411,6 +477,7 @@ class Deployment:
         telemetry_sample_every: int = 2,
         engine_factory=None,
         elastic=None,
+        quality=None,
         clock=None,
         **engine_kwargs,
     ) -> "Deployment":
@@ -423,8 +490,20 @@ class Deployment:
         **kwargs)`` overrides engine construction (benchmarks inject
         contention-taxed engines).  ``elastic`` is a dict of
         :class:`repro.cluster.ElasticController` knobs (cluster mode
-        only; ``None`` serves a fixed pool).  Extra ``engine_kwargs``
-        (e.g. ``max_wait_s``) reach every engine."""
+        only; ``None`` serves a fixed pool).  ``quality`` (fleet mode)
+        attaches a :class:`~repro.fleet.QualityController` that
+        degrades/restores elastic tenants' subnet width on shed
+        pressure: ``True`` for defaults, a knob dict, or a built
+        controller.  Extra ``engine_kwargs`` (e.g. ``max_wait_s``)
+        reach every engine."""
+        if quality is not None and self.mode != "fleet":
+            raise ValueError(
+                "quality= drives width adaptation off the fleet "
+                "router's admission signal; in cluster mode attach "
+                "the host-pool controller (serve(elastic=...)) — it "
+                "prefers width degradation — and in single mode call "
+                "engine.set_level() directly"
+            )
         if self.mode == "cluster":
             from repro.cluster import Cluster, make_policy
 
@@ -451,7 +530,9 @@ class Deployment:
             from repro.fleet import DeviceTimeLedger, FleetRouter
 
             self.ledger = DeviceTimeLedger()
-            self.router = FleetRouter(ledger=self.ledger)
+            self.router = FleetRouter(
+                ledger=self.ledger, quality=self._as_quality(quality)
+            )
         for name, tp in self.tenants.items():
             observer = (
                 self.ledger.observer(name) if self.ledger is not None
@@ -487,10 +568,28 @@ class Deployment:
         return self
 
     @staticmethod
+    def _as_quality(quality):
+        if quality is None or quality is False:
+            return None
+        from repro.fleet import QualityController
+
+        if isinstance(quality, QualityController):
+            return quality
+        if quality is True:
+            return QualityController()
+        return QualityController(**quality)
+
+    @staticmethod
     def _build_engine(tp: TenantPlan, factory, **kwargs):
         kwargs.setdefault("allowed_batch_sizes", tp.table.batch_sizes)
         if factory is not None:
             return factory(tp, tp.config, **kwargs)
+        if tp.elastic is not None:
+            from repro.elastic import ElasticEngine
+
+            return ElasticEngine(
+                tp.elastic, quality_floor=tp.quality_floor, **kwargs
+            )
         from repro.serving import ServingEngine
 
         return ServingEngine(tp.model, tp.packed, tp.config, **kwargs)
@@ -539,11 +638,24 @@ class Deployment:
             out = {"mode": "fleet", "tenants": self.router.stats()}
             if self.ledger is not None:
                 out["ledger"] = self.ledger.snapshot()
+            if self.router.quality is not None:
+                out["quality"] = [
+                    dataclasses.asdict(r)
+                    for r in self.router.quality.journal
+                ]
             return out
         e = self._serving()
-        return {
+        out = {
             "mode": "single",
             "served": e.served,
             "steps": e.steps,
             "swaps": e.swaps,
         }
+        if hasattr(e, "set_level"):
+            out.update(
+                level=e.level,
+                quality_floor=e.quality_floor,
+                level_switches=e.level_switches,
+                degraded_share=e.degraded_share,
+            )
+        return out

@@ -11,7 +11,8 @@ Three layers, each usable alone:
   queue (`WorkQueue` + `WorkerPool`) with journaled
   :class:`~repro.cachesvc.workqueue.JobRecord`\\ s.
 * :mod:`repro.cachesvc.service` / :mod:`repro.cachesvc.jobs` — the
-  background jobs (``prewarm`` / ``refit`` / ``explore``) and the
+  background jobs (``prewarm`` / ``refit`` / ``explore`` /
+  ``flush``) and the
   :class:`~repro.cachesvc.service.CacheService` that schedules them
   off the serving path.
 
@@ -37,6 +38,7 @@ _LAZY = {
     "coverage_report": "repro.cachesvc.jobs",
     "execution_counts": "repro.cachesvc.jobs",
     "explore_once": "repro.cachesvc.jobs",
+    "flush_once": "repro.cachesvc.jobs",
     "prewarm_once": "repro.cachesvc.jobs",
     "refit_once": "repro.cachesvc.jobs",
     "CacheService": "repro.cachesvc.service",

@@ -453,18 +453,34 @@ class TieredBackend(StoreBackend):
     back and promotes back-tier hits into the front; ``put`` writes
     through to both unless ``write_back=True``, which journals dirty
     keys locally until :meth:`flush` pushes them (an ETag check skips
-    keys the back already holds verbatim).  The tier's own hit/miss
+    keys the back already holds verbatim).  ``flush_interval_s``
+    declares the tier's flush cadence: the backend itself stays
+    passive (no threads here), but
+    ``CacheService.enqueue_flush`` reads it to drive :meth:`flush`
+    as a periodic ``WorkQueue`` job, bounding how stale the shared
+    back tier can get.  The tier's own hit/miss
     counters measure front effectiveness; :meth:`stats` nests both
     tiers' counters."""
 
     scheme = "tiered"
 
     def __init__(self, front: StoreBackend, back: StoreBackend, *,
-                 write_back: bool = False, policy=None, clock=time.time):
+                 write_back: bool = False, flush_interval_s=None,
+                 policy=None, clock=time.time):
         super().__init__(policy=policy, clock=clock)
+        if flush_interval_s is not None:
+            flush_interval_s = float(flush_interval_s)
+            if flush_interval_s <= 0:
+                raise ValueError("flush_interval_s must be positive")
+            if not write_back:
+                raise ValueError(
+                    "flush_interval_s without write_back=True is "
+                    "meaningless: write-through tiers are never dirty"
+                )
         self.front = front
         self.back = back
         self.write_back = write_back
+        self.flush_interval_s = flush_interval_s
         self._dirty: set = set()
 
     def _read(self, key):
@@ -535,6 +551,7 @@ class TieredBackend(StoreBackend):
     def stats(self) -> dict:
         out = super().stats()
         out["pending_write_back"] = len(self._dirty)
+        out["flush_interval_s"] = self.flush_interval_s
         out["front"] = self.front.stats()
         out["back"] = self.back.stats()
         return out

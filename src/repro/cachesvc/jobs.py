@@ -1,4 +1,4 @@
-"""The cache service's three background job kinds — each an
+"""The cache service's background job kinds — each an
 idempotent function returning a JSON-able result dict for the
 :class:`~repro.cachesvc.workqueue.JobRecord` journal.
 
@@ -32,7 +32,16 @@ idempotent function returning a JSON-able result dict for the
     better than the old one repriced under the same correction.  The
     corrected table itself is never persisted — same rule as the
     adaptive runtime (transient conditions must not poison warm
-    starts).  Nothing here runs on the serving path.
+    starts).  ``sweep="frontier"`` re-measures *all* stale candidates
+    per row with per-candidate folding instead of the cheapest only.
+    Nothing here runs on the serving path.
+
+``flush``
+    Push a write-back :class:`~repro.cachesvc.TieredBackend`'s dirty
+    keys to its shared back tier (:func:`flush_once`) — enqueued as a
+    periodic job on the backend's ``flush_interval_s`` cadence, so
+    staleness of the shared tier is bounded by the timer, not by the
+    next explicit flush.
 """
 
 from __future__ import annotations
@@ -137,6 +146,53 @@ class _ShimReport:
     ratio: float
 
 
+def _fold_candidates(table, ratios: Mapping, *, min_factor: float):
+    """A corrected copy of `table` with **per-candidate** kernel-time
+    scaling: ``ratios`` maps ``(layer, config) -> observed/stored``,
+    and only those exact rows change (at every profiled batch);
+    totals are rebuilt as kernel plus the unchanged boundary.  The
+    frontier sweep needs this instead of
+    :func:`~repro.adapt.controller.fold_observed`, whose one ratio
+    per drifted layer scales *all* same-placement candidates alike —
+    correct for a segment-level drift report, wrong for a sweep that
+    measured each candidate individually."""
+    from repro.core.profiler import ProfileTable
+
+    touched = {layer for layer, _ in ratios}
+    times: dict = {}
+    kernels: dict = {}
+    for b in table.batch_sizes:
+        times[b], kernels[b] = [], []
+        for i in range(len(table.layer_labels)):
+            if i not in touched:
+                times[b].append(table.times[b][i])
+                kernels[b].append(
+                    table.kernel_times[b][i]
+                    if table.kernel_times is not None
+                    else table.times[b][i]
+                )
+                continue
+            krow, trow = {}, {}
+            for cfg in table.configs_for(b, i):
+                k = table.kernel_time(b, i, cfg)
+                f = ratios.get((i, cfg))
+                if f is not None:
+                    k *= max(f, min_factor)
+                krow[cfg] = k
+                trow[cfg] = k + table.boundary_time(b, i, cfg)
+            kernels[b].append(krow)
+            times[b].append(trow)
+    return ProfileTable(
+        model_name=table.model_name,
+        batch_sizes=table.batch_sizes,
+        layer_labels=table.layer_labels,
+        times=times,
+        kernel_times=kernels,
+        h2d_times=table.h2d_times,
+        d2h_times=table.d2h_times,
+    )
+
+
 def explore_once(
     store,
     model,
@@ -148,47 +204,74 @@ def explore_once(
     policy: str = "dp",
     min_count: int = 1,
     min_factor: float = 1e-3,
+    sweep: str = "cheapest",
 ) -> dict:
     """One exploration pass (the ``explore`` job body).
 
-    For every :func:`coverage_report` row, measure the cheapest stored
-    candidate — ``measure_fn(layer, config, batch) -> seconds`` — and
-    fold the measured/stored kernel-time ratio back via
-    ``fold_observed``.  The old mapping is repriced on the corrected
+    ``sweep="cheapest"`` (default) measures each
+    :func:`coverage_report` row's cheapest stored candidate —
+    ``measure_fn(layer, config, batch) -> seconds`` — and folds the
+    measured/stored kernel-time ratio back via ``fold_observed``
+    (scaling the row's same-placement candidates together).
+    ``sweep="frontier"`` re-measures **every** stale candidate of
+    every row and folds each one's own ratio (per-candidate, via
+    :func:`_fold_candidates`) — more measurement off the hot path,
+    but a mis-priced non-cheapest candidate can only be caught this
+    way.  Either way the old mapping is repriced on the corrected
     table (same correction, fair comparison) against a fresh mapper
     run; a strictly better, different mapping is persisted to the
-    store.  Returns the journaled result dict."""
+    store.  Returns the journaled result dict — one ``rows`` entry
+    per measurement."""
     from repro.adapt.controller import fold_observed
 
+    if sweep not in ("cheapest", "frontier"):
+        raise ValueError(
+            f"sweep must be 'cheapest' or 'frontier', got {sweep!r}"
+        )
     rows = coverage_report(table, batch, counts, min_count=min_count)
     if not rows:
-        return {"explored": 0, "improved": False}
+        return {"explored": 0, "improved": False, "sweep": sweep}
 
-    reports = []
     measured_rows = []
-    for i, row in enumerate(rows):
-        ref = min(
-            row.candidates,
-            key=lambda c: table.kernel_time(batch, row.layer, c),
-        )
-        stored = table.kernel_time(batch, row.layer, ref)
-        observed = float(measure_fn(row.layer, ref, batch))
+
+    def measure(row, cfg):
+        stored = table.kernel_time(batch, row.layer, cfg)
+        observed = float(measure_fn(row.layer, cfg, batch))
         ratio = observed / stored if stored > 0 else 1.0
-        reports.append(_ShimReport(segment_index=i, ratio=ratio))
         measured_rows.append(
             {
                 "layer": row.layer,
                 "placement": row.placement,
-                "config": ref,
+                "config": cfg,
                 "stored_s": stored,
                 "observed_s": observed,
                 "ratio": ratio,
             }
         )
+        return ratio
 
-    corrected = fold_observed(
-        table, _ShimConfig(rows), reports, min_factor=min_factor
-    )
+    if sweep == "frontier":
+        ratios = {
+            (row.layer, cfg): measure(row, cfg)
+            for row in rows
+            for cfg in row.candidates
+        }
+        corrected = _fold_candidates(
+            table, ratios, min_factor=min_factor
+        )
+    else:
+        reports = []
+        for i, row in enumerate(rows):
+            ref = min(
+                row.candidates,
+                key=lambda c: table.kernel_time(batch, row.layer, c),
+            )
+            reports.append(
+                _ShimReport(segment_index=i, ratio=measure(row, ref))
+            )
+        corrected = fold_observed(
+            table, _ShimConfig(rows), reports, min_factor=min_factor
+        )
 
     old = store.load_mapping(model, policy=policy, batch=batch)
     if old is None or old.layer_labels != table.layer_labels:
@@ -210,11 +293,21 @@ def explore_once(
         store.save_mapping(new)
     return {
         "explored": len(rows),
+        "measured": len(measured_rows),
+        "sweep": sweep,
         "improved": improved,
         "old_expected_s": old_repriced.expected_time_per_example,
         "new_expected_s": new.expected_time_per_example,
         "rows": measured_rows,
     }
+
+
+def flush_once(backend) -> dict:
+    """One write-back flush pass (the ``flush`` job body): push the
+    tiered backend's dirty keys to its back tier.  Idempotent — a
+    clean tier flushes zero keys."""
+    pushed = int(backend.flush())
+    return {"pushed": pushed, "pending": len(backend.dirty())}
 
 
 def prewarm_once(

@@ -16,7 +16,11 @@ deduped, journaled background jobs:
 * :meth:`enqueue_explore` — re-profile never-or-stale-executed
   placements from a coverage report and fold corrections back
   (``jobs.explore_once``), closing the exploration residual off the
-  hot path.
+  hot path; ``sweep="frontier"`` re-measures every stale candidate,
+  not only the cheapest.
+* :meth:`enqueue_flush` — push a write-back tier's dirty keys to the
+  shared back tier, one-shot or (with a ``flush_interval_s``)
+  periodic via the queue's ``repeat_s`` timer.
 
 Jobs are **keyed like the store entries they materialize** (the
 profile/mapping/predictor key strings), so queue dedupe and store
@@ -165,11 +169,14 @@ class CacheService:
         batch: int,
         counts: Mapping,
         measure_fn: Callable | None = None,
+        sweep: str = "cheapest",
     ) -> bool:
         """Queue an exploration pass for a registered model: `counts`
         is :func:`~repro.cachesvc.jobs.execution_counts` output from
         the serving tier; stale placements get re-measured off the hot
-        path and a strictly-better remap is persisted."""
+        path and a strictly-better remap is persisted.
+        ``sweep="frontier"`` re-measures *every* stale candidate row
+        (per-candidate folding) instead of the cheapest only."""
         measure = measure_fn or self.measure_fn
         if measure is None:
             raise ValueError("explore needs a measure_fn")
@@ -188,7 +195,41 @@ class CacheService:
                 measure_fn=measure,
                 policy=self.policy,
                 min_count=self.explore_min_count,
+                sweep=sweep,
             ),
+        )
+
+    # -- flush -------------------------------------------------------
+    def enqueue_flush(self, backend=None, *, interval_s=None) -> bool:
+        """Queue a write-back flush of `backend` (default: this
+        store's backend; it must expose ``flush()``/``dirty()``, i.e.
+        be a write-back :class:`~repro.cachesvc.TieredBackend`).
+
+        With an interval — explicit ``interval_s``, else the
+        backend's own ``flush_interval_s`` — the job is **periodic**:
+        it re-runs every interval until ``queue.cancel("flush",
+        backend.uri())``, so dirty keys reach the shared back tier on
+        a timer instead of waiting for an explicit flush.  Without
+        either, it is a one-shot flush.  Keyed by the backend URI:
+        one timer per tier, however many times this is called."""
+        backend = backend if backend is not None else self.store.backend
+        # every backend inherits a no-op flush(); only the tiered
+        # write-back journal exposes dirty(), so gate on that
+        if not hasattr(backend, "dirty"):
+            raise ValueError(
+                f"backend {backend.uri()!r} has no write-back journal; "
+                "timed flushes need a write-back TieredBackend"
+            )
+        interval = (
+            interval_s if interval_s is not None
+            else getattr(backend, "flush_interval_s", None)
+        )
+        return self.queue.submit(
+            "flush",
+            backend.uri(),
+            lambda: _jobs.flush_once(backend),
+            delay_s=0.0 if interval is None else float(interval),
+            repeat_s=None if interval is None else float(interval),
         )
 
     # -- execution ---------------------------------------------------

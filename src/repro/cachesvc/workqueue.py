@@ -10,6 +10,10 @@ simple and safe:
 * **dedupe** — :meth:`WorkQueue.submit` refuses a (kind, key) that is
   already queued or running, so a popularity spike enqueues one
   prewarm, not fifty;
+* **delay + periodic jobs** — ``submit(..., delay_s=, repeat_s=)``
+  defers the first run and, with ``repeat_s``, re-enqueues a fresh
+  attempt one period after each completion (the timed write-back
+  flush rides this) until :meth:`WorkQueue.cancel`;
 * **retry with exponential backoff** — a failing job is re-queued with
   ``backoff_s * 2**(attempt-1)`` delay until ``max_attempts``, then
   journaled as failed (never silently dropped, never retried forever);
@@ -64,6 +68,7 @@ class _Job:
     enqueued_s: float
     due_s: float
     attempts: int = 0
+    repeat_s: float | None = None    # periodic job: re-enqueue period
 
     @property
     def ident(self) -> tuple:
@@ -101,6 +106,7 @@ class WorkQueue:
         self._cv = threading.Condition(self._lock)
         self._queued: list = []
         self._running: set = set()
+        self._cancelled: set = set()
         self._journal: list = []
         self._seq = 0
         self.submitted = 0
@@ -108,23 +114,63 @@ class WorkQueue:
         self.retries = 0
 
     # -- producer side -----------------------------------------------
-    def submit(self, kind: str, key: str, fn: Callable) -> bool:
+    def submit(
+        self,
+        kind: str,
+        key: str,
+        fn: Callable,
+        *,
+        delay_s: float = 0.0,
+        repeat_s: float | None = None,
+    ) -> bool:
         """Enqueue ``fn`` as job (kind, key); False when that identity
         is already queued or running (idempotent jobs make the newer
-        submission redundant, not lost)."""
+        submission redundant, not lost).
+
+        ``delay_s`` defers the first run.  ``repeat_s`` makes the job
+        **periodic**: each completion (success *or* final failure —
+        a timer must not die because one tick failed) re-enqueues a
+        fresh attempt ``repeat_s`` after it finishes, until
+        :meth:`cancel`.  Periodic re-enqueues happen at the queue
+        level precisely because this dedupe would refuse a job
+        resubmitting itself from inside its own ``fn`` (its identity
+        is still marked running there)."""
+        if delay_s < 0:
+            raise ValueError("delay_s must be >= 0")
+        if repeat_s is not None and repeat_s <= 0:
+            raise ValueError("repeat_s must be positive")
         ident = (str(kind), str(key))
         with self._cv:
             live = {j.ident for j in self._queued} | self._running
             if ident in live:
                 self.deduped += 1
                 return False
+            self._cancelled.discard(ident)
             now = self.clock()
             self._queued.append(
-                _Job(ident[0], ident[1], fn, enqueued_s=now, due_s=now)
+                _Job(
+                    ident[0], ident[1], fn, enqueued_s=now,
+                    due_s=now + delay_s, repeat_s=repeat_s,
+                )
             )
             self.submitted += 1
             self._cv.notify()
             return True
+
+    def cancel(self, kind: str, key: str) -> bool:
+        """Drop job (kind, key): dequeue it if queued; if currently
+        running, let the attempt finish but suppress a periodic
+        re-enqueue.  Returns True when the identity was live."""
+        ident = (str(kind), str(key))
+        with self._cv:
+            before = len(self._queued)
+            self._queued = [j for j in self._queued if j.ident != ident]
+            if len(self._queued) != before:
+                return True
+            if ident in self._running:
+                self._cancelled.add(ident)
+                return True
+            return False
 
     # -- consumer side -----------------------------------------------
     def _pop_due(self):
@@ -152,6 +198,22 @@ class WorkQueue:
         )
         self._seq += 1
 
+    def _reschedule(self, job: _Job) -> None:
+        """(lock held) re-enqueue a finished periodic job one period
+        out, as a fresh attempt — unless it was cancelled mid-run."""
+        if job.repeat_s is None:
+            return
+        if job.ident in self._cancelled:
+            self._cancelled.discard(job.ident)
+            return
+        now = self.clock()
+        self._queued.append(
+            _Job(
+                job.kind, job.key, job.fn, enqueued_s=now,
+                due_s=now + job.repeat_s, repeat_s=job.repeat_s,
+            )
+        )
+
     def _execute(self, job: _Job) -> None:
         """Run one popped job; journal or re-queue under the lock."""
         job.attempts += 1
@@ -165,6 +227,7 @@ class WorkQueue:
                         job, "failed", None,
                         f"{type(exc).__name__}: {exc}",
                     )
+                    self._reschedule(job)
                 else:
                     self.retries += 1
                     job.due_s = self.clock() + self.backoff_s * (
@@ -179,6 +242,7 @@ class WorkQueue:
                 job, "done",
                 result if isinstance(result, dict) else None, "",
             )
+            self._reschedule(job)
             self._cv.notify_all()
 
     def run_pending(self) -> int:
@@ -194,20 +258,26 @@ class WorkQueue:
             ran += 1
 
     def drain(self, *, sleep: Callable[[float], None] | None = None) -> int:
-        """Run until the queue is empty, sleeping to the next backoff
-        deadline between passes.  Inject ``sleep=fake_clock.advance``
-        in tests: retries then experience full virtual backoff with
-        zero real sleeping.  Returns total jobs run."""
+        """Run until every **one-shot** job (including its backoff
+        retries) has finished, sleeping to the next deadline between
+        passes; periodic jobs never make a queue "dirty", or a single
+        ``repeat_s`` timer would make drain spin forever.  Inject
+        ``sleep=fake_clock.advance`` in tests: retries then experience
+        full virtual backoff with zero real sleeping.  Returns total
+        jobs run."""
         sleep = time.sleep if sleep is None else sleep
         ran = 0
         while True:
             ran += self.run_pending()
             with self._cv:
-                if not self._queued:
+                oneshot = [
+                    j for j in self._queued if j.repeat_s is None
+                ]
+                if not oneshot:
                     return ran
                 delay = max(
                     0.0,
-                    min(j.due_s for j in self._queued) - self.clock(),
+                    min(j.due_s for j in oneshot) - self.clock(),
                 )
             # max() guards a clock that only moves when told to: a
             # zero-delay sleep must still let it make progress
@@ -240,6 +310,9 @@ class WorkQueue:
             return {
                 "queued": len(self._queued),
                 "running": len(self._running),
+                "repeating": sum(
+                    1 for j in self._queued if j.repeat_s is not None
+                ),
                 "submitted": self.submitted,
                 "deduped": self.deduped,
                 "retries": self.retries,
@@ -292,12 +365,16 @@ class WorkerPool:
             q._execute(job)
 
     def join_idle(self, timeout: float = 5.0) -> bool:
-        """Wait until nothing is queued or running (True) or `timeout`
-        real seconds elapse (False)."""
+        """Wait until no one-shot work is queued and nothing is
+        running (True) or `timeout` real seconds elapse (False).
+        Dormant periodic jobs don't count — a flush timer would
+        otherwise make the pool permanently non-idle."""
         deadline = time.monotonic() + timeout
         q = self.queue
         with q._cv:
-            while q._queued or q._running:
+            while (
+                any(j.repeat_s is None for j in q._queued) or q._running
+            ):
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     return False

@@ -205,11 +205,50 @@ class Cluster:
         for name in host.tenant_names():
             engine = host.router.tenant(name).engine
             new = by_name[name]
-            if new.layer_configs != engine.config.layer_configs:
+            # elastic engines route the swap to their full-width slot
+            # (a degraded tenant keeps its current level); compare
+            # against that slot, not whatever level is serving
+            current = (
+                engine.level_config(0)
+                if hasattr(engine, "level_config") else engine.config
+            )
+            if new.layer_configs != current.layer_configs:
                 engine.swap_configuration(new)
         host.add_tenant(tp, by_name[tp.name])
 
     # -- scaling hooks (called by ElasticController) -------------------
+    def degrade_width(self) -> tuple:
+        """Narrow every elastic engine with quality-floor room by one
+        subnet level (``repro.elastic``) — the controller's preferred
+        move under high water: a width swap is a batch boundary, a new
+        host is a topology change.  Returns descriptors of the
+        engines narrowed (``tenant@h{id}:L{level}``), empty when no
+        floor permits."""
+        moved = []
+        for h in self.active_hosts():
+            for t in h.router.tenants():
+                e = t.engine
+                if hasattr(e, "set_level") and e.can_degrade():
+                    target = e.level + 1
+                    e.set_level(target)
+                    moved.append(f"{t.name}@h{h.host_id}:L{target}")
+        return tuple(moved)
+
+    def restore_width(self) -> tuple:
+        """Widen every degraded elastic engine by one subnet level —
+        the controller's preferred move under low water: quality debt
+        is paid back before capacity is removed.  Returns descriptors
+        of the engines widened, empty when none are degraded."""
+        moved = []
+        for h in self.active_hosts():
+            for t in h.router.tenants():
+                e = t.engine
+                if hasattr(e, "set_level") and e.can_restore():
+                    target = e.level - 1
+                    e.set_level(target)
+                    moved.append(f"{t.name}@h{h.host_id}:L{target}")
+        return tuple(moved)
+
     def scale_up(self) -> tuple:
         """Add a host and replicate the hottest host's residents onto
         it, splitting that host's load.  Returns (host, moved)."""

@@ -11,8 +11,12 @@ loop over the serving cluster:
   fraction of its recent dispatch rounds — the host-level roll-up of
   what the device-time ledger meters per tenant);
 * mean occupancy >= ``high_water`` for ``sustain`` consecutive
-  observations → **scale up** (add a host, replicate the hottest
-  host's tenants onto it);
+  observations → **degrade width** when the cluster hosts elastic
+  tenants with floor room (``repro.elastic`` — a narrower subnet is a
+  batch-boundary swap, far cheaper than a host), else **scale up**
+  (add a host, replicate the hottest host's tenants onto it);
+  symmetrically, low water restores degraded width before it drains
+  a host;
 * mean occupancy <= ``low_water`` for ``sustain`` observations →
   **drain** the emptiest host: it stops accepting requests, finishes
   its in-flight batches bit-exact, and only then **retires**;
@@ -162,6 +166,19 @@ class ElasticController:
 
         if want_up:
             self._hi_streak = 0
+            # degrading an elastic tenant's width is cheaper than a
+            # host: prefer it whenever a quality floor leaves room
+            # (repro.elastic; a narrower subnet swap is a batch
+            # boundary, a new host is a topology change)
+            degraded = getattr(cluster, "degrade_width", lambda: ())()
+            if degraded:
+                return self._record(
+                    "degrade_width",
+                    f"mean occupancy {mean_occ:.2f} >= "
+                    f"{self.high_water} for {self.sustain} ticks; "
+                    "narrowed elastic tenants instead of adding a host",
+                    occ, len(active), len(active), degraded,
+                )
             host, moved = cluster.scale_up()
             return self._record(
                 "scale_up",
@@ -171,6 +188,18 @@ class ElasticController:
             )
 
         self._lo_streak = 0
+        # headroom pays back quality debt before it removes capacity:
+        # restore degraded widths first, shrink the pool only once
+        # every elastic tenant is back at full width
+        restored = getattr(cluster, "restore_width", lambda: ())()
+        if restored:
+            return self._record(
+                "restore_width",
+                f"mean occupancy {mean_occ:.2f} <= {self.low_water} "
+                f"for {self.sustain} ticks; restored elastic tenant "
+                "width before shrinking the pool",
+                occ, len(active), len(active), restored,
+            )
         victim = min(active, key=lambda h: (h.occupancy(), -h.host_id))
         moved = cluster.start_drain(victim)
         return self._record(

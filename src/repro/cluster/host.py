@@ -71,8 +71,19 @@ class ServingHost:
         kwargs = dict(self._engine_kwargs)
         kwargs.setdefault("allowed_batch_sizes", tp.table.batch_sizes)
         kwargs["observer"] = self.ledger.observer(tp.name)
+        elastic_plan = getattr(tp, "elastic", None)
         if self._engine_factory is not None:
             engine = self._engine_factory(tp, config, **kwargs)
+        elif elastic_plan is not None:
+            # elastic tenant: all subnet levels resident, the joint
+            # host-local mapping serving as level 0's configuration
+            from repro.elastic import ElasticEngine
+
+            engine = ElasticEngine(
+                elastic_plan, config=config,
+                quality_floor=getattr(tp, "quality_floor", None),
+                **kwargs,
+            )
         else:
             from repro.serving import ServingEngine
 

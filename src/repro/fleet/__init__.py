@@ -12,7 +12,9 @@ co-located placements interfere.  Three pieces close that loop
   worse than — the all-models-all-GPU assignment;
 * :mod:`router` — :class:`FleetRouter`: priority/deadline dispatch
   into per-tenant ServingEngines with admission control (shed at the
-  door rather than serve past the SLO);
+  door rather than serve past the SLO), plus the
+  :class:`QualityController` that degrades elastic tenants' subnet
+  width under sustained shedding instead (``repro.elastic``, §15);
 * :mod:`ledger` — :class:`DeviceTimeLedger`: metered per-tenant
   host/device occupancy feeding measured co-runner shares back into
   the joint mapper and the per-tenant drift loops.
@@ -21,7 +23,12 @@ See ``benchmarks/fleet_bench.py`` and ``examples/serve_fleet.py``.
 """
 
 from repro.fleet.ledger import DeviceTimeLedger, TenantUsage
-from repro.fleet.router import FleetRouter, Tenant
+from repro.fleet.router import (
+    FleetRouter,
+    QualityController,
+    QualityRecord,
+    Tenant,
+)
 from repro.fleet.scheduler import (
     FleetPlan,
     TenantPlan,

@@ -24,6 +24,13 @@ per-tenant :class:`~repro.adapt.RemapController`:
   tenant's engine observer feeds it and the router closes the
   tenant's ledger step after each dispatch.
 
+* **quality** — when a :class:`QualityController` is attached, the
+  router closes every dispatch round by letting it observe shed
+  pressure and hot-swap elastic tenants' engines to a narrower subnet
+  level before the next round sheds more (``repro.elastic``; docs
+  §15) — degrading width instead of availability, and restoring width
+  when the pressure clears.
+
 Threading contract (see ``repro.serving.batcher``): ``submit`` may be
 called from many client threads concurrently; ``step`` must be driven
 from a single dispatch thread.
@@ -34,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+import time
 
 from repro.serving.batcher import Request
 from repro.serving.engine import ServingEngine
@@ -101,10 +109,171 @@ class Tenant:
         return math.ceil(pending / self.engine.batcher.max_batch)
 
 
+@dataclasses.dataclass(frozen=True)
+class QualityRecord:
+    """One journaled quality transition — the elastic analogue of
+    ``SwapRecord`` (remaps) and ``ScaleRecord`` (topology)."""
+
+    seq: int
+    at_s: float
+    tenant: str
+    action: str          # "degrade" | "restore" | "floor_hold"
+    from_level: int
+    to_level: int
+    reason: str
+    shed_delta: int      # rejections since the previous observation
+    backlog_batches: int
+    est_step_s: float
+    deadline_s: float
+    applied: bool        # False when deferred to the batch boundary
+
+
+class QualityController:
+    """SLO-driven width adaptation for elastic tenants.
+
+    Watches each elastic tenant's *shed pressure* — the delta of its
+    rejection counter between dispatch rounds (admission control
+    already encodes backlog × step-estimate vs deadline, so a shed is
+    the precise signal that the current width cannot hold the SLO) —
+    and drives the engine's subnet level with PR 4-style hysteresis:
+
+    * ``degrade_after`` consecutive rounds with sheds → hot-swap one
+      level narrower (``engine.set_level(level + 1)``), *before* the
+      next round sheds more.  At the engine's ``quality_floor`` a
+      ``floor_hold`` is journaled instead — the floor is honored, the
+      overflow sheds.
+    * ``restore_after`` consecutive shed-free rounds → one level wider,
+      but only when the wider level's expected step fits inside
+      ``headroom × deadline`` (restoring into a step that instantly
+      sheds again would oscillate).
+
+    Every transition (and every held floor) is a :class:`QualityRecord`
+    in :attr:`journal`.  Attach via ``FleetRouter(quality=...)`` — the
+    router calls :meth:`observe` at the end of each dispatch round —
+    or call :meth:`observe` from your own loop.
+    """
+
+    def __init__(
+        self,
+        *,
+        degrade_after: int = 2,
+        restore_after: int = 4,
+        headroom: float = 0.5,
+        clock=time.monotonic,
+    ):
+        if degrade_after < 1 or restore_after < 1:
+            raise ValueError(
+                "degrade_after and restore_after must be >= 1"
+            )
+        if not 0.0 < headroom <= 1.0:
+            raise ValueError("headroom must be in (0, 1]")
+        self.degrade_after = degrade_after
+        self.restore_after = restore_after
+        self.headroom = headroom
+        self._clock = clock
+        self.journal: list[QualityRecord] = []
+        self._seq = 0
+        self._last_rejected: dict[str, int] = {}
+        self._hi: dict[str, int] = {}
+        self._lo: dict[str, int] = {}
+
+    @staticmethod
+    def _elastic(tenant: Tenant):
+        """The tenant's engine when it supports level switching."""
+        engine = tenant.engine
+        return engine if hasattr(engine, "set_level") else None
+
+    def _record(self, tenant: Tenant, from_level, action, to_level,
+                reason, shed_delta, applied) -> QualityRecord:
+        rec = QualityRecord(
+            seq=self._seq,
+            at_s=self._clock(),
+            tenant=tenant.name,
+            action=action,
+            from_level=from_level,
+            to_level=to_level,
+            reason=reason,
+            shed_delta=shed_delta,
+            backlog_batches=tenant.backlog_batches(extra=0),
+            est_step_s=tenant.step_expected_s(),
+            deadline_s=tenant.deadline_s,
+            applied=applied,
+        )
+        self._seq += 1
+        self.journal.append(rec)
+        return rec
+
+    def _wider_fits(self, tenant: Tenant, engine) -> bool:
+        """Would the next-wider level's step fit in ``headroom ×
+        deadline``?  (Always, for deadline-free tenants.)"""
+        if math.isinf(tenant.deadline_s):
+            return True
+        cfg = engine.level_config(engine.level - 1)
+        est = cfg.expected_time_per_example * cfg.proper_batch_size
+        return est <= self.headroom * tenant.deadline_s
+
+    def observe(self, router: "FleetRouter") -> list:
+        """One hysteresis tick over the router's elastic tenants;
+        returns the records journaled this tick."""
+        out = []
+        for t in router.tenants():
+            engine = self._elastic(t)
+            if engine is None:
+                continue
+            name = t.name
+            shed = t.rejected - self._last_rejected.get(name, 0)
+            self._last_rejected[name] = t.rejected
+            if shed > 0:
+                self._lo[name] = 0
+                self._hi[name] = self._hi.get(name, 0) + 1
+                if self._hi[name] < self.degrade_after:
+                    continue
+                self._hi[name] = 0
+                if engine.can_degrade():
+                    # journal the pre-switch level: set_level mutates
+                    # engine.level when it applies immediately
+                    frm = engine.level
+                    target = frm + 1
+                    applied = engine.set_level(target)
+                    out.append(self._record(
+                        t, frm, "degrade", target,
+                        f"{shed} sheds, sustained "
+                        f"{self.degrade_after} rounds",
+                        shed, applied,
+                    ))
+                else:
+                    out.append(self._record(
+                        t, engine.level, "floor_hold", engine.level,
+                        f"overloaded at quality_floor "
+                        f"{engine.quality_floor}; shedding",
+                        shed, False,
+                    ))
+            else:
+                self._hi[name] = 0
+                self._lo[name] = self._lo.get(name, 0) + 1
+                if (
+                    self._lo[name] >= self.restore_after
+                    and engine.can_restore()
+                    and self._wider_fits(t, engine)
+                ):
+                    self._lo[name] = 0
+                    frm = engine.level
+                    target = frm - 1
+                    applied = engine.set_level(target)
+                    out.append(self._record(
+                        t, frm, "restore", target,
+                        f"shed-free {self.restore_after} rounds, "
+                        "wider step fits headroom",
+                        0, applied,
+                    ))
+        return out
+
+
 class FleetRouter:
-    def __init__(self, *, ledger=None):
+    def __init__(self, *, ledger=None, quality=None):
         self._tenants: dict[str, Tenant] = {}
         self.ledger = ledger
+        self.quality = quality
 
     def add_tenant(
         self,
@@ -190,6 +359,10 @@ class FleetRouter:
                 self.ledger.close_step(t.name)
             if done:
                 served[t.name] = done
+        if self.quality is not None:
+            # after dispatch: this round's sheds are on the counters,
+            # and level switches land at an idle batch boundary
+            self.quality.observe(self)
         return served
 
     def drain(self, *, max_steps: int = 1000) -> dict:
@@ -205,9 +378,12 @@ class FleetRouter:
         return total
 
     def stats(self) -> dict:
-        """Per-tenant admission/served counters for reporting."""
-        return {
-            t.name: {
+        """Per-tenant admission/served counters for reporting.
+        Elastic tenants additionally report their current subnet
+        level, floor, switch count and degraded-time share."""
+        out = {}
+        for t in self._tenants.values():
+            row = {
                 "priority": t.priority,
                 "deadline_s": t.deadline_s,
                 "admitted": t.admitted,
@@ -221,5 +397,12 @@ class FleetRouter:
                     else "profiled"
                 ),
             }
-            for t in self._tenants.values()
-        }
+            if hasattr(t.engine, "set_level"):
+                row.update(
+                    level=t.engine.level,
+                    quality_floor=t.engine.quality_floor,
+                    level_switches=t.engine.level_switches,
+                    degraded_share=t.engine.degraded_share,
+                )
+            out[t.name] = row
+        return out

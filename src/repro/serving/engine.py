@@ -118,7 +118,11 @@ class ServingEngine:
     def _build_pipeline(self, config: EfficientConfiguration):
         """Compile the segment pipeline for `config`.  Subclass seam:
         benchmarks wrap the returned pipeline's host segments to inject
-        synthetic contention (``benchmarks/adapt_bench.py``)."""
+        synthetic contention (``benchmarks/adapt_bench.py``), and
+        ``repro.elastic.ElasticEngine`` compiles each subnet level
+        through it (with that level's ``self.model`` /
+        ``self.packed_params`` published) so wrappers apply to every
+        level."""
         return SegmentPipeline(
             self.model, self.packed_params, config, device=self._device
         )

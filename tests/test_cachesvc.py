@@ -15,11 +15,14 @@ import jax
 from repro import api
 from repro.bnn import build_model
 from repro.bnn.models import pack_params
-from repro.cachesvc import CacheService, WorkerPool, WorkQueue
+from repro.cachesvc import (
+    CacheService, MemoryBackend, TieredBackend, WorkerPool, WorkQueue,
+)
 from repro.cachesvc.jobs import (
     coverage_report,
     execution_counts,
     explore_once,
+    flush_once,
     prewarm_once,
     refit_once,
 )
@@ -97,8 +100,8 @@ def test_permanent_failure_journaled_after_max_attempts():
     assert rec.error == "ValueError: planted failure"
     assert rec.result is None
     assert q.stats() == {
-        "queued": 0, "running": 0, "submitted": 1, "deduped": 0,
-        "retries": 1, "done": 0, "failed": 1,
+        "queued": 0, "running": 0, "repeating": 0, "submitted": 1,
+        "deduped": 0, "retries": 1, "done": 0, "failed": 1,
     }
 
 
@@ -160,6 +163,96 @@ def test_queue_validates_knobs():
         WorkQueue(backoff_s=-1.0)
     with pytest.raises(ValueError):
         WorkerPool(WorkQueue(), n_workers=0)
+    q = WorkQueue()
+    with pytest.raises(ValueError):
+        q.submit("k", "k", lambda: None, delay_s=-1.0)
+    with pytest.raises(ValueError):
+        q.submit("k", "k", lambda: None, repeat_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# periodic jobs (repeat_s): the timed write-back flush rides these
+# ---------------------------------------------------------------------------
+
+
+def test_periodic_job_repeats_on_its_cadence_until_cancelled():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock)
+    runs = []
+    assert q.submit(
+        "flush", "tier", lambda: runs.append(clock()) or {"n": 1},
+        delay_s=2.0, repeat_s=2.0,
+    ) is True
+    # one timer per identity, however often it is (re)enqueued
+    assert q.submit("flush", "tier", lambda: None) is False
+    assert q.run_pending() == 0                # first tick not due yet
+    assert q.stats()["repeating"] == 1
+    clock.advance(2.0)
+    assert q.run_pending() == 1
+    assert q.run_pending() == 0                # rescheduled, not due
+    clock.advance(2.0)
+    assert q.run_pending() == 1
+    assert runs == [2.0, 4.0]                  # exact virtual cadence
+    assert all(r.status == "done" for r in q.journal)
+    assert q.cancel("flush", "tier") is True   # dequeues the timer
+    clock.advance(10.0)
+    assert q.run_pending() == 0
+    assert q.cancel("flush", "tier") is False  # nothing live anymore
+
+
+def test_periodic_job_survives_failed_tick_and_drain_terminates():
+    clock = FakeClock()
+    q = WorkQueue(clock=clock, max_attempts=1)
+    ticks = []
+
+    def flaky():
+        ticks.append(1)
+        if len(ticks) == 1:
+            raise RuntimeError("one bad tick")
+        return {"ok": True}
+
+    q.submit("flush", "k", flaky, repeat_s=1.0)
+    q.submit("prewarm", "p", lambda: {"done": True})
+    # drain must return once the one-shot finishes: a live timer never
+    # makes the queue "dirty", or drain would spin forever
+    q.drain(sleep=clock.advance)
+    assert any(
+        r.kind == "prewarm" and r.status == "done" for r in q.journal
+    )
+    flush_recs = [r for r in q.journal if r.kind == "flush"]
+    assert flush_recs[0].status == "failed"    # tick failed...
+    assert q.pending() == 1                    # ...but the timer lives
+    clock.advance(1.0)
+    assert q.run_pending() == 1                # next tick succeeds
+    assert q.journal[-1].status == "done"
+    assert q.journal[-1].result == {"ok": True}
+
+
+def test_periodic_job_can_cancel_itself_mid_run():
+    q = WorkQueue(clock=FakeClock())
+
+    def last_tick():
+        q.cancel("flush", "self")              # running: suppresses
+        return {"last": True}                  # the re-enqueue only
+
+    q.submit("flush", "self", last_tick, repeat_s=1.0)
+    assert q.run_pending() == 1
+    assert q.pending() == 0                    # no reschedule
+    assert q.journal[-1].status == "done"
+
+
+def test_join_idle_ignores_dormant_periodic_jobs():
+    q = WorkQueue()                            # real clock for threads
+    q.submit("flush", "timer", lambda: None, delay_s=60.0,
+             repeat_s=60.0)
+    q.submit("prewarm", "k", lambda: {"n": 1})
+    pool = WorkerPool(q, n_workers=1).start()
+    try:
+        # a dormant flush timer must not make the pool non-idle
+        assert pool.join_idle(timeout=5.0) is True
+    finally:
+        pool.stop()
+    assert q.stats()["done"] == 1 and q.stats()["repeating"] == 1
 
 
 # ---------------------------------------------------------------------------
@@ -321,7 +414,9 @@ def test_explore_corrects_planted_stale_row(tmp_path):
     covered = execution_counts(refreshed, 25, into=dict(counts))
     out2 = explore_once(store, m, t, batch=4, counts=covered,
                         measure_fn=measure_fn)
-    assert out2 == {"explored": 0, "improved": False}
+    assert out2 == {
+        "explored": 0, "improved": False, "sweep": "cheapest",
+    }
 
 
 def test_explore_keeps_old_mapping_when_measurement_confirms(tmp_path):
@@ -340,6 +435,111 @@ def test_explore_keeps_old_mapping_when_measurement_confirms(tmp_path):
     assert out["improved"] is False
     kept = store.load_mapping(m, policy="dp", batch=4)
     assert kept.layer_configs == old.layer_configs
+
+
+def test_explore_frontier_sweeps_every_stale_candidate(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _stale_device_table(m)
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    old = map_efficient_configuration(t, policy="dp", batch_sizes=(4,))
+    store.save_mapping(old)
+    counts = execution_counts(old, steps=25)
+    rows = coverage_report(t, 4, counts)
+    n_candidates = sum(len(r.candidates) for r in rows)
+
+    measured = []
+    out = explore_once(
+        store, m, t, batch=4, counts=counts, sweep="frontier",
+        measure_fn=lambda l, c, b: measured.append(c) or 1e-4,
+    )
+    # every candidate of every stale row was measured, not just the
+    # stored-cheapest one per row
+    assert out["sweep"] == "frontier"
+    assert out["explored"] == len(rows)
+    assert out["measured"] == n_candidates > out["explored"]
+    assert len(measured) == n_candidates
+    assert out["improved"] is True
+    for r in out["rows"]:
+        assert r["stored_s"] == 5e-3 and r["observed_s"] == 1e-4
+        assert r["ratio"] == pytest.approx(1e-4 / 5e-3)
+    refreshed = store.load_mapping(m, policy="dp", batch=4)
+    assert all(
+        placement_of(c) == DEVICE for c in refreshed.layer_configs
+    )
+    with pytest.raises(ValueError):
+        explore_once(store, m, t, batch=4, counts=counts,
+                     measure_fn=lambda l, c, b: 1e-4, sweep="bogus")
+
+
+def _decoy_table(model, *, batch=4, cpu=1e-3, decoy=2e-3, dev=5e-3,
+                 bnd=1e-5, decoy_cfg="X"):
+    """One device config (the decoy) stored cheapest-on-device and
+    priced accurately; every *other* device config stored slow but
+    actually fast.  The cheapest sweep only ever measures the decoy,
+    so only a frontier sweep can find the real winner."""
+    n = len(model.specs)
+    labels = tuple(f"L{s.idx}:{s.notation}" for s in model.specs)
+
+    def kern(c):
+        if c == CPU:
+            return cpu
+        return decoy if c == decoy_cfg else dev
+
+    times = {batch: [
+        {c: kern(c) if c == CPU else kern(c) + 2 * bnd for c in CONFIGS}
+        for _ in range(n)
+    ]}
+    kernels = {batch: [{c: kern(c) for c in CONFIGS} for _ in range(n)]}
+    return ProfileTable(
+        model.name, (batch,), labels, times, kernel_times=kernels,
+        h2d_times={batch: [bnd] * n}, d2h_times={batch: [bnd] * n},
+    )
+
+
+def test_frontier_catches_mispriced_non_cheapest_candidate(tmp_path):
+    m = build_model("fashion_mnist", scale=0.25)
+    t = _decoy_table(m)
+    store = ProfileStore(tmp_path, fingerprint="fp")
+    old = map_efficient_configuration(t, policy="dp", batch_sizes=(4,))
+    assert all(placement_of(c) == HOST for c in old.layer_configs)
+    store.save_mapping(old)
+    counts = execution_counts(old, steps=25)
+
+    def truth(layer, config, batch):
+        return 2e-3 if config == "X" else 1e-4
+
+    # the cheapest sweep measures only the decoy, confirms it, and
+    # scales the whole device side by its ratio of 1.0 — blind spot
+    out = explore_once(store, m, t, batch=4, counts=counts,
+                       measure_fn=truth, sweep="cheapest")
+    assert out["improved"] is False
+    assert all(r["config"] == "X" and r["ratio"] == 1.0
+               for r in out["rows"])
+    kept = store.load_mapping(m, policy="dp", batch=4)
+    assert kept.layer_configs == old.layer_configs
+
+    # the frontier sweep folds each candidate's own ratio: the truly
+    # fast non-decoy configs surface and win the remap
+    out = explore_once(store, m, t, batch=4, counts=counts,
+                       measure_fn=truth, sweep="frontier")
+    assert out["improved"] is True
+    refreshed = store.load_mapping(m, policy="dp", batch=4)
+    assert all(
+        placement_of(c) == DEVICE and c != "X"
+        for c in refreshed.layer_configs
+    )
+
+
+def test_flush_once_pushes_dirty_keys_then_is_idempotent():
+    front, back = MemoryBackend("fl-f"), MemoryBackend("fl-b")
+    tier = TieredBackend(front, back, write_back=True)
+    tier.put("a/x.json", "1")
+    tier.put("a/y.json", "2")
+    assert back.get("a/x.json") is None      # write-back: front only
+    assert flush_once(tier) == {"pushed": 2, "pending": 0}
+    assert back.get("a/x.json") == "1"
+    assert back.get("a/y.json") == "2"
+    assert flush_once(tier) == {"pushed": 0, "pending": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -447,6 +647,49 @@ def test_service_explore_closes_stale_row_through_queue(tmp_path):
     assert store.load_mapping(
         m, policy="dp", batch=4
     ).layer_configs != old.layer_configs
+
+
+def test_service_timed_write_back_flush(tmp_path):
+    front, back = MemoryBackend("svc-f"), MemoryBackend("svc-b")
+    tier = TieredBackend(front, back, write_back=True,
+                         flush_interval_s=5.0)
+    clock = FakeClock()
+    svc = CacheService(ProfileStore(tier, fingerprint="fp"),
+                       clock=clock)
+    tier.put("k.json", "v")
+    assert svc.enqueue_flush() is True       # picks up the backend's
+    assert svc.enqueue_flush() is False      # interval; one timer/tier
+    assert svc.run_pending() == 0            # not due until t=5
+    clock.advance(5.0)
+    assert svc.run_pending() == 1
+    rec = svc.journal[-1]
+    assert rec.kind == "flush" and rec.key == tier.uri()
+    assert rec.result == {"pushed": 1, "pending": 0}
+    assert back.get("k.json") == "v"
+    tier.put("k2.json", "v2")                # dirty again: the timer
+    clock.advance(5.0)                       # fires every interval
+    assert svc.run_pending() == 1
+    assert back.get("k2.json") == "v2"
+    assert svc.queue.stats()["repeating"] == 1
+    assert svc.queue.cancel("flush", tier.uri()) is True
+
+
+def test_service_one_shot_flush_and_backend_guard(tmp_path):
+    front, back = MemoryBackend("os-f"), MemoryBackend("os-b")
+    tier = TieredBackend(front, back, write_back=True)
+    svc = CacheService(ProfileStore(tier, fingerprint="fp"),
+                       clock=FakeClock())
+    tier.put("x.json", "1")
+    assert svc.enqueue_flush() is True       # no interval: one-shot,
+    assert svc.run_pending() == 1            # due immediately
+    assert svc.queue.stats()["repeating"] == 0
+    assert back.get("x.json") == "1"
+    assert svc.enqueue_flush() is True       # key freed: can re-queue
+
+    # a plain (non-write-back) store backend has nothing to flush
+    bare = CacheService(ProfileStore(tmp_path, fingerprint="fp"))
+    with pytest.raises(ValueError, match="flush"):
+        bare.enqueue_flush()
 
 
 # ---------------------------------------------------------------------------

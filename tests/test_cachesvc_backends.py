@@ -262,6 +262,19 @@ def test_tiered_write_back_flush_and_etag_skip(tmp_path):
     assert back.peek("a.json") == "new"
 
 
+def test_tiered_flush_interval_knob_validated():
+    front, back = MemoryBackend(), MemoryBackend()
+    t = TieredBackend(front, back, write_back=True,
+                      flush_interval_s=5.0)
+    assert t.flush_interval_s == 5.0
+    assert t.stats()["flush_interval_s"] == 5.0
+    with pytest.raises(ValueError, match="positive"):
+        TieredBackend(front, back, write_back=True,
+                      flush_interval_s=0.0)
+    with pytest.raises(ValueError, match="write_back"):
+        TieredBackend(front, back, flush_interval_s=5.0)
+
+
 # ---------------------------------------------------------------------------
 # URI resolution
 # ---------------------------------------------------------------------------

@@ -1,0 +1,580 @@
+"""Elastic BNN subsystem (docs/ARCHITECTURE.md §15): nested-width
+subnet slicing (property-tested bit-exact against an independent pack
+of the sliced fp weights), level-tagged store keys that never collide,
+per-level planning (warm-start and predictor-estimated), the
+ElasticEngine's batch-boundary level switches, the QualityController's
+hysteresis state machine (pure fakes, no jax), and the cluster
+controller's degrade-width-before-scale-up preference.
+"""
+
+import math
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import TenantPlan, map_model
+from repro.bnn.layers import parse_notation
+from repro.bnn.models import (
+    BNNModel, forward_packed, pack_params, prepare_input_packed,
+)
+from repro.cluster import Cluster
+from repro.elastic import (
+    ElasticEngine,
+    ElasticPlan,
+    ElasticSpec,
+    SubnetFamily,
+    level_name,
+    plan_family,
+    slice_params_fp,
+)
+from repro.fleet.router import QualityController, Tenant
+from repro.store import ProfileStore, model_signature
+
+from tests._hypothesis_compat import given, settings, st
+from tests.fixtures import FakeClock, flat_table
+from tests.test_cluster import FakeEngine, fake_tenant
+
+# 8x8 input, both convs above the 32-lane clamp so every fraction
+# genuinely narrows them, two pool stages so the FC-after-FLAT slice
+# exercises the strided (per-spatial-position) path
+SMALL_NOTATION = (
+    "C64", "MP4", "S", "C64", "MP2", "S", "FLAT", "FC128", "S", "FC10",
+)
+
+
+def small_model(name="elastic-small"):
+    specs = tuple(parse_notation(SMALL_NOTATION, (8, 8), 1, 10))
+    return BNNModel(name, specs, (8, 8), 1, 10)
+
+
+def _family(m=None, packed=None, fractions=(1.0, 0.5), seed=0):
+    m = m if m is not None else small_model()
+    if packed is None:
+        packed = pack_params(m.specs, m.init(jax.random.PRNGKey(seed)))
+    return SubnetFamily.build(
+        m, packed, ElasticSpec(fractions=fractions)
+    )
+
+
+# ---------------------------------------------------------------------------
+# subnet slicing: the bit-exactness property
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6)
+@given(
+    fraction=st.sampled_from([0.75, 0.5, 0.25]),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_prefix_slice_bit_exact_vs_fresh_pack(fraction, seed):
+    """The subsystem's core contract: slicing the *packed* words must
+    equal packing the sliced *fp* weights — for every tensor, and for
+    the end-to-end packed forward — at any fraction and any weights."""
+    m = small_model()
+    params = m.init(jax.random.PRNGKey(seed))
+    packed = pack_params(m.specs, params)
+    family = _family(m, packed, fractions=(1.0, fraction))
+    narrow = family.level(1)
+    fresh = pack_params(
+        narrow.model.specs,
+        slice_params_fp(m.specs, params, narrow.model.specs),
+    )
+    for i, (a, b) in enumerate(zip(narrow.packed, fresh)):
+        assert set(a) == set(b), f"layer {i}: param keys diverge"
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), (
+                f"layer {i} [{k}]: sliced packed != freshly packed"
+            )
+    x01 = jax.random.uniform(
+        jax.random.PRNGKey(seed + 100), (2, 8, 8, 1)
+    )
+    xw = prepare_input_packed(x01)
+    assert np.array_equal(
+        np.asarray(forward_packed(narrow.model.specs, narrow.packed, xw)),
+        np.asarray(forward_packed(narrow.model.specs, fresh, xw)),
+    )
+
+
+def test_family_levels_nest_and_level0_is_base():
+    m = small_model()
+    packed = pack_params(m.specs, m.init(jax.random.PRNGKey(0)))
+    family = _family(m, packed, fractions=(1.0, 0.5, 0.25))
+    assert len(family) == 3
+    assert family.base.model is m                 # same object, no copy
+    assert family.base.packed[0] is packed[0]
+    widths = [
+        tuple(s.units for s in lvl.model.specs) for lvl in family
+    ]
+    for wide, narrow in zip(widths, widths[1:]):
+        assert all(n <= w for w, n in zip(wide, narrow))
+        assert narrow != wide
+    # narrower conv weights are views into the base words (no copies)
+    base_conv = np.asarray(family.base.packed[0]["w_words"])
+    l1_conv = np.asarray(family.level(1).packed[0]["w_words"])
+    assert l1_conv.shape[0] < base_conv.shape[0]
+
+
+def test_family_rejects_fraction_that_clamps_to_duplicate_widths():
+    # 0.25 and 0.2 both clamp every layer to the 32-lane floor
+    with pytest.raises(ValueError, match="same widths"):
+        _family(fractions=(1.0, 0.25, 0.2))
+
+
+def test_elastic_spec_validates_fractions():
+    with pytest.raises(ValueError, match="start at 1.0"):
+        ElasticSpec(fractions=(0.5, 0.25))
+    with pytest.raises(ValueError, match="decreasing"):
+        ElasticSpec(fractions=(1.0, 0.5, 0.5))
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        ElasticSpec(fractions=(1.0, -0.5))
+    with pytest.raises(ValueError, match="min_units"):
+        ElasticSpec(fractions=(1.0, 0.5), min_units=48)
+
+
+# ---------------------------------------------------------------------------
+# level-tagged store keys
+# ---------------------------------------------------------------------------
+
+
+def test_level_store_keys_never_collide():
+    family = _family(fractions=(1.0, 0.5, 0.25))
+    assert family.names() == (
+        "elastic-small", "elastic-small#L1", "elastic-small#L2",
+    )
+    assert level_name("m", 0) == "m"
+    store = ProfileStore("mem://elastic-keys", fingerprint="fp")
+    sigs = [model_signature(lvl.model) for lvl in family]
+    assert len(set(sigs)) == len(sigs)
+    prof_keys = {store.profile_key(s, (4,)) for s in sigs}
+    map_keys = {store.mapping_key(s, "dp", 4) for s in sigs}
+    assert len(prof_keys) == len(sigs) and len(map_keys) == len(sigs)
+    # all K mappings live side by side in one store
+    for lvl in family:
+        store.save_mapping(
+            map_model(flat_table(lvl.model, batch=4), policy="dp")
+        )
+    for lvl in family:
+        got = store.load_mapping(lvl.model, policy="dp", batch=4)
+        assert got is not None and got.model_name == lvl.model.name
+
+
+# ---------------------------------------------------------------------------
+# per-level planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_family_warm_starts_every_level_from_store():
+    family = _family(fractions=(1.0, 0.5))
+    store = ProfileStore("mem://elastic-warm", fingerprint="fp")
+    for lvl in family:
+        store.save_profile(flat_table(lvl.model, batch=4))
+    plan = plan_family(family, batch_sizes=(4,), store=store)
+    # every level's profile was a cache hit: zero profiling sweeps
+    assert store.stats()["hits"] >= 2
+    assert plan.predicted == (False, False)
+    assert len(plan) == 2 and plan.batch == 4
+    assert [tp.name for tp in plan.levels] == list(family.names())
+    assert all(c.proper_batch_size == 4 for c in plan.configs)
+    # mappings were persisted under their level-tagged keys
+    for lvl in family:
+        assert store.load_mapping(
+            lvl.model, policy="dp", batch=4
+        ) is not None
+
+
+def test_plan_family_rejects_base_plan_for_other_model():
+    family = _family()
+    other = small_model(name="not-in-family")
+    t = flat_table(other, batch=4)
+    base = TenantPlan(
+        name=other.name, model=other, packed=[], table=t,
+        config=map_model(t),
+    )
+    with pytest.raises(ValueError, match="different model"):
+        plan_family(family, base=base)
+
+
+def test_plan_family_estimate_prices_narrow_levels_via_predictor():
+    family = _family(fractions=(1.0, 0.5))
+    store = ProfileStore("mem://elastic-est", fingerprint="fp")
+    store.save_profile(flat_table(family.base.model, batch=4))
+
+    predicted_names = []
+
+    class _FakePredictor:
+        def predict_table(self, model, batch_sizes, *, registry=None,
+                          configs=None):
+            predicted_names.append(model.name)
+            return flat_table(model, batch=batch_sizes[0])
+
+    store.load_predictor = lambda: _FakePredictor()
+    plan = plan_family(
+        family, batch_sizes=(4,), store=store, estimate=True
+    )
+    # level 0 is always real; the narrow level came from the predictor
+    assert plan.predicted == (False, True)
+    assert predicted_names == [family.level(1).model.name]
+    # the predicted level's mapping persists, but no profile must ever
+    # masquerade as measured under its store key
+    assert store.load_mapping(
+        family.level(1).model, policy="dp", batch=4
+    ) is not None
+    assert store.load_profile(family.level(1).model, (4,)) is None
+
+
+def test_plan_family_estimate_falls_back_without_predictor():
+    family = _family(fractions=(1.0, 0.5))
+    store = ProfileStore("mem://elastic-fallback", fingerprint="fp")
+    for lvl in family:
+        store.save_profile(flat_table(lvl.model, batch=4))
+    plan = plan_family(
+        family, batch_sizes=(4,), store=store, estimate=True
+    )
+    assert plan.predicted == (False, False)   # real (warm) profiles
+
+
+# ---------------------------------------------------------------------------
+# ElasticEngine: level switches at batch boundaries
+# ---------------------------------------------------------------------------
+
+
+def _tiny_plan(batch=2):
+    family = _family(fractions=(1.0, 0.5))
+    levels = []
+    for lvl in family:
+        t = flat_table(lvl.model, batch=batch)
+        levels.append(TenantPlan(
+            name=lvl.model.name, model=lvl.model, packed=lvl.packed,
+            table=t, config=map_model(t),
+        ))
+    return ElasticPlan(
+        family=family, levels=tuple(levels), predicted=(False, False)
+    )
+
+
+def _refs(plan, xw):
+    return [
+        np.asarray(forward_packed(tp.model.specs, tp.packed, xw))
+        for tp in plan.levels
+    ]
+
+
+def _engine(plan, batch=2, **kwargs):
+    return ElasticEngine(
+        plan, allowed_batch_sizes=(batch,), max_wait_s=0.0, **kwargs
+    )
+
+
+def test_engine_requires_two_levels():
+    plan = _tiny_plan()
+    single = ElasticPlan(
+        family=plan.family, levels=plan.levels[:1], predicted=(False,)
+    )
+    with pytest.raises(ValueError, match="two subnet levels"):
+        _engine(single)
+
+
+def test_engine_set_level_publishes_and_serves_bit_exact():
+    plan = _tiny_plan(batch=2)
+    engine = _engine(plan)
+    engine.warm()
+    x01 = jax.random.uniform(jax.random.PRNGKey(5), (2, 8, 8, 1))
+    xw = np.asarray(prepare_input_packed(x01))
+    refs = _refs(plan, xw)
+    for k in (0, 1, 0):                       # down and back up
+        assert engine.set_level(k) is True
+        assert engine.level == k
+        assert engine.model.name == plan.levels[k].name
+        reqs = [engine.submit(x) for x in xw]
+        engine.step(force=True)
+        for j, r in enumerate(reqs):
+            assert np.array_equal(r.wait(timeout=30.0), refs[k][j]), (
+                f"level {k}: response {j} not bit-exact"
+            )
+    assert engine.level_switches == 2
+    assert 0.0 < engine.degraded_share < 1.0  # one of three steps
+
+
+def test_engine_enforces_quality_floor_at_actuator():
+    engine = _engine(_tiny_plan(), quality_floor=0)
+    assert engine.quality_floor == 0
+    assert not engine.can_degrade()
+    with pytest.raises(ValueError, match="quality_floor"):
+        engine.set_level(1)
+    with pytest.raises(ValueError, match="outside"):
+        engine.set_level(5)
+    with pytest.raises(ValueError, match="quality_floor"):
+        _engine(_tiny_plan(), quality_floor=7)
+
+
+def test_engine_defers_level_switch_mid_step():
+    engine = _engine(_tiny_plan())
+    engine.warm()
+    engine._in_step = True                     # simulate in-flight wave
+    assert engine.set_level(1) is False
+    assert engine.level == 0 and engine._pending_level == 1
+    engine._in_step = False
+    engine.step(force=True)                    # empty queue: boundary
+    assert engine.level == 1 and engine._pending_level is None
+
+
+def test_engine_routes_swap_by_model_name():
+    plan = _tiny_plan(batch=2)
+    engine = _engine(plan)
+    new_l1 = map_model(
+        flat_table(plan.levels[1].model, batch=2), policy="greedy"
+    )
+    assert engine.swap_configuration(new_l1) is True   # dormant level
+    assert engine.level_config(1) is new_l1
+    assert engine.config is engine.level_config(0)     # live untouched
+    stranger = map_model(
+        flat_table(small_model("stranger"), batch=2)
+    )
+    with pytest.raises(ValueError, match="no subnet level"):
+        engine.swap_configuration(stranger)
+    rebatched = map_model(flat_table(plan.levels[1].model, batch=4))
+    with pytest.raises(ValueError, match="batch size"):
+        engine.swap_configuration(rebatched)
+
+
+# ---------------------------------------------------------------------------
+# QualityController: hysteresis over pure fakes (no jax)
+# ---------------------------------------------------------------------------
+
+
+class _FakeElastic:
+    """Duck-typed ElasticEngine: just the level axis, no serving."""
+
+    def __init__(self, *, levels=3, floor=2, step_s=1.0, batch=4):
+        self.quality_floor = floor
+        self.level = 0
+        self.level_switches = 0
+        self.telemetry = None
+        # narrower levels cost proportionally less, like a real plan
+        self._configs = [
+            SimpleNamespace(
+                expected_time_per_example=step_s / (2 ** k),
+                proper_batch_size=batch,
+                segments=tuple,
+            )
+            for k in range(levels)
+        ]
+        self.batcher = SimpleNamespace(
+            pending=lambda: 0, max_batch=batch
+        )
+
+    @property
+    def config(self):
+        return self._configs[self.level]
+
+    def can_degrade(self):
+        return self.level < self.quality_floor
+
+    def can_restore(self):
+        return self.level > 0
+
+    def level_config(self, k):
+        return self._configs[k]
+
+    def set_level(self, k):
+        self.level = int(k)
+        self.level_switches += 1
+        return True
+
+
+def _quality_rig(*, deadline_s=math.inf, **engine_kwargs):
+    engine = _FakeElastic(**engine_kwargs)
+    tenant = Tenant(name="t", engine=engine, deadline_s=deadline_s)
+    router = SimpleNamespace(tenants=lambda: (tenant,))
+    return engine, tenant, router
+
+
+def _tick(qc, router, tenant, *, shed=0):
+    tenant.rejected += shed
+    return qc.observe(router)
+
+
+def test_quality_degrades_after_exact_hysteresis_count():
+    engine, tenant, router = _quality_rig()
+    qc = QualityController(
+        degrade_after=3, restore_after=2, clock=FakeClock()
+    )
+    assert _tick(qc, router, tenant, shed=2) == []
+    assert _tick(qc, router, tenant, shed=1) == []
+    assert engine.level == 0                  # 2 < degrade_after
+    (rec,) = _tick(qc, router, tenant, shed=4)
+    assert engine.level == 1
+    assert rec.action == "degrade" and rec.applied is True
+    assert (rec.from_level, rec.to_level) == (0, 1)
+    assert rec.shed_delta == 4 and rec.tenant == "t"
+    # the streak reset: the next shed round does not degrade again
+    assert _tick(qc, router, tenant, shed=1) == []
+
+
+def test_quality_holds_at_floor_and_journals_it():
+    engine, tenant, router = _quality_rig(floor=1)
+    engine.level = 1                          # already at the floor
+    qc = QualityController(
+        degrade_after=1, restore_after=9, clock=FakeClock()
+    )
+    (rec,) = _tick(qc, router, tenant, shed=5)
+    assert rec.action == "floor_hold" and rec.applied is False
+    assert rec.to_level == 1 == engine.level  # floor honored, shed
+    assert engine.level_switches == 0
+
+
+def test_quality_restore_gated_by_headroom_then_restores():
+    engine, tenant, router = _quality_rig(
+        deadline_s=7.0, step_s=1.0, batch=4
+    )
+    engine.level = 1
+    qc = QualityController(
+        degrade_after=1, restore_after=2, headroom=0.5,
+        clock=FakeClock(),
+    )
+    # wider step = 1.0 * 4 = 4.0s > 0.5 * 7.0 — calm rounds alone
+    # must not restore into a step that would instantly shed again
+    for _ in range(4):
+        assert _tick(qc, router, tenant) == []
+    assert engine.level == 1
+    tenant.deadline_s = math.inf              # headroom opens up
+    (rec,) = _tick(qc, router, tenant)
+    assert rec.action == "restore" and engine.level == 0
+    assert (rec.from_level, rec.to_level) == (1, 0)
+
+
+def test_quality_shed_resets_restore_streak():
+    engine, tenant, router = _quality_rig()
+    engine.level = 1
+    qc = QualityController(
+        degrade_after=9, restore_after=3, clock=FakeClock()
+    )
+    _tick(qc, router, tenant)
+    _tick(qc, router, tenant)
+    _tick(qc, router, tenant, shed=1)         # resets the calm streak
+    _tick(qc, router, tenant)
+    assert _tick(qc, router, tenant) == []
+    assert engine.level == 1                  # only 2 of 3 calm rounds
+    (rec,) = _tick(qc, router, tenant)
+    assert rec.action == "restore" and engine.level == 0
+
+
+def test_quality_ignores_non_elastic_tenants_and_validates_knobs():
+    tenant = Tenant(name="t", engine=FakeEngine(
+        fake_tenant("t").config
+    ))
+    router = SimpleNamespace(tenants=lambda: (tenant,))
+    qc = QualityController(degrade_after=1, clock=FakeClock())
+    tenant.rejected = 50
+    assert qc.observe(router) == [] and qc.journal == []
+    with pytest.raises(ValueError):
+        QualityController(degrade_after=0)
+    with pytest.raises(ValueError):
+        QualityController(restore_after=0)
+    with pytest.raises(ValueError):
+        QualityController(headroom=0.0)
+    with pytest.raises(ValueError):
+        QualityController(headroom=1.5)
+
+
+# ---------------------------------------------------------------------------
+# cluster controller: degrade width before adding hosts
+# ---------------------------------------------------------------------------
+
+
+class _ElasticFakeEngine(FakeEngine):
+    """FakeEngine with the level axis the cluster's width hooks use."""
+
+    def __init__(self, config, *, clock=None, step_cost_s=0.0,
+                 quality_floor=1):
+        super().__init__(config, clock=clock, step_cost_s=step_cost_s)
+        self.quality_floor = quality_floor
+        self.level = 0
+        self.level_switches = 0
+        self.degraded_share = 0.0
+
+    def can_degrade(self):
+        return self.level < self.quality_floor
+
+    def can_restore(self):
+        return self.level > 0
+
+    def level_config(self, k):
+        return self.config
+
+    def set_level(self, k):
+        self.level = int(k)
+        self.level_switches += 1
+        return True
+
+
+def _elastic_cluster(*, n_hosts=1, floor=1, step_cost_s=0.5, **elastic):
+    tenants = [fake_tenant("a")]
+    clock = FakeClock()
+
+    def factory(tp, config, **_kw):
+        return _ElasticFakeEngine(
+            config, clock=clock, step_cost_s=step_cost_s,
+            quality_floor=floor,
+        )
+
+    cluster = Cluster(
+        tenants, n_hosts=n_hosts, engine_factory=factory, clock=clock,
+        batch_sizes=(4,), elastic=elastic,
+    )
+    return clock, cluster
+
+
+def _engines(cluster):
+    return [
+        t.engine
+        for h in cluster.active_hosts()
+        for t in h.router.tenants()
+    ]
+
+
+def test_cluster_prefers_width_degradation_then_scales_up():
+    clock, cluster = _elastic_cluster(
+        floor=1, high_water=0.5, low_water=0.01, sustain=2, max_hosts=4,
+    )
+    for _ in range(6):
+        for i in range(8):
+            cluster.submit("a", i)
+        cluster.step(force=True)
+        clock.advance(0.01)
+    actions = [r.action for r in cluster.elastic.journal]
+    # first hot window narrows the tenant instead of adding a host;
+    # only once the floor is exhausted does the pool grow
+    assert "degrade_width" in actions and "scale_up" in actions
+    assert actions.index("degrade_width") < actions.index("scale_up")
+    deg = next(
+        r for r in cluster.elastic.journal
+        if r.action == "degrade_width"
+    )
+    assert deg.n_active_after == deg.n_active_before  # no new host
+    assert deg.moved_tenants == ("a@h0:L1",)
+    assert any(e.level == 1 for e in _engines(cluster))
+    cluster.drain()
+
+
+def test_cluster_restores_width_before_draining_a_host():
+    clock, cluster = _elastic_cluster(
+        n_hosts=2, step_cost_s=0.0,
+        high_water=0.9, low_water=0.2, sustain=2, min_hosts=1,
+    )
+    for e in _engines(cluster):
+        e.level = 1                            # planted quality debt
+    for _ in range(2):
+        cluster.step()
+        clock.advance(0.1)
+    actions = [r.action for r in cluster.elastic.journal]
+    assert actions[0] == "restore_width"       # debt paid back first
+    assert all(e.level == 0 for e in _engines(cluster))
+    assert len(cluster.active_hosts()) == 2    # no host touched yet
+    for _ in range(2):                         # still idle: now shrink
+        cluster.step()
+        clock.advance(0.1)
+    assert "drain" in [r.action for r in cluster.elastic.journal]
+    cluster.drain()
